@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall seconds over repeats."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def gflops(flops: float, seconds: float) -> float:
+    return flops / seconds / 1e9 if seconds > 0 else 0.0
+
+
+def rows_to_csv(rows: List[Dict]) -> str:
+    out = []
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        out.append(f"{name},{us},{derived}")
+    return "\n".join(out)

@@ -1,0 +1,42 @@
+"""Paper Fig. 10: the only tuning parameter — tile size, at the paper's
+two sizes (N=8192, 16384).
+
+Small tiles under-saturate device + link (low arithmetic intensity:
+2T^3 flops vs 3T^2 bytes moved); big tiles starve parallelism (Eq. 2).
+Paper picks T=1024 on Everest; the modeled curve should rise and
+plateau around the same point."""
+from __future__ import annotations
+
+from repro.core.blas3 import shadow_run
+from repro.core.runtime import BlasxRuntime, RuntimeConfig
+from repro.core.tiling import degree_of_parallelism
+
+TILES = [256, 512, 1024, 2048, 4096]
+SIZES = [8192, 16384]
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        best = (None, 0.0)
+        for t in TILES:
+            rt = BlasxRuntime(RuntimeConfig(n_devices=3, policy="blasx",
+                                            cache_bytes=4 << 30, mode="sim",
+                                            execute=False))
+            shadow_run("gemm", n, tile=t, runtime=rt)
+            g = 2.0 * n ** 3 / rt.makespan() / 1e9
+            if g > best[1]:
+                best = (t, g)
+            rows.append({
+                "name": f"fig10/dgemm/N{n}/T{t}",
+                "us_per_call": "",
+                "modeled_gflops": f"{g:.0f}",
+                "degree_of_parallelism": degree_of_parallelism(n, n, t),
+            })
+        rows.append({
+            "name": f"fig10/dgemm/N{n}/best",
+            "us_per_call": "",
+            "best_tile": best[0],
+            "paper_choice": 1024,
+        })
+    return rows

@@ -1,0 +1,58 @@
+"""Paper Fig. 8: per-device COMPT/COMM/OTHER decomposition at N=16384
+and the finish-time gap between fastest and slowest device.
+
+Paper numbers (3x K40 Everest): fastest-slowest gap 0.039 s for BLASX
+vs 0.296 s for cuBLAS-XT and 0.784 s for MAGMA's static split.  Here
+the same measurement runs on the virtual-clock engine with
+heterogeneous realtime speeds under a speed-blind static planner."""
+from __future__ import annotations
+
+from repro.core.blas3 import shadow_run
+from repro.core.runtime import BlasxRuntime, RuntimeConfig
+
+N = 16384
+TILE = 1024
+SPEEDS = [1.0, 0.8, 1.3]     # realtime (saturation-dependent)
+NOMINAL = [1.0, 1.0, 1.0]    # what static planners believe
+
+
+def _run(policy):
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=3, policy=policy, speeds=SPEEDS, nominal_speeds=NOMINAL,
+        cache_bytes=4 << 30, mode="sim", execute=False))
+    shadow_run("gemm", N, tile=TILE, runtime=rt)
+    return rt
+
+
+def run():
+    rows = []
+    gaps = {}
+    for policy in ("blasx", "parsec", "static", "cublasxt"):
+        rt = _run(policy)
+        clocks = [d.clock for d in rt.devices]
+        gaps[policy] = max(clocks) - min(clocks)
+        for d in rt.devices:
+            led = d.ledger
+            rows.append({
+                "name": f"fig8/{policy}/device{d.id}",
+                "us_per_call": "",
+                "compt_s": f"{led.compute_time:.3f}",
+                "comm_unoverlapped_s": f"{led.unoverlapped_comm:.3f}",
+                "finish_s": f"{d.clock:.3f}",
+                "tasks": led.tasks,
+            })
+        rows.append({
+            "name": f"fig8/{policy}/gap",
+            "us_per_call": "",
+            "fastest_slowest_gap_s": f"{gaps[policy]:.4f}",
+        })
+    rows.append({
+        "name": "fig8/summary",
+        "us_per_call": "",
+        "static_gap_over_blasx":
+            f"{gaps['static']/max(1e-12, gaps['blasx']):.1f}x",
+        "cublasxt_gap_over_blasx":
+            f"{gaps['cublasxt']/max(1e-12, gaps['blasx']):.1f}x",
+        "paper_reported": "7.6x (0.296 vs 0.039)",
+    })
+    return rows

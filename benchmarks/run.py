@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+
+  table1  GEMM share of L3 BLAS FLOPs            (paper Table I)
+  fig5    BLASX_Malloc vs naive allocator        (paper Fig. 5)
+  fig7    throughput + speedup 1/2/3 devices     (paper Fig. 7)
+  table3  average parallel efficiency            (paper Table III)
+  fig8    heterogeneous load balance             (paper Fig. 8)
+  fig10   tile-size sweep                        (paper Fig. 10)
+  table4  link model / transfer classes          (paper Table IV)
+  table5  communication volume by policy         (paper Table V)
+  pallas  TPU tile kernel (interpret) + blocks   (beyond paper)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig5_heap, fig7_throughput, fig8_load_balance,
+               fig10_tile_size, pallas_kernel, table1_gemm_fraction,
+               table4_link_model, table5_comm_volume)
+from .common import rows_to_csv
+
+MODULES = [
+    ("table1", table1_gemm_fraction),
+    ("fig5", fig5_heap),
+    ("fig7+table3", fig7_throughput),
+    ("fig8", fig8_load_balance),
+    ("fig10", fig10_tile_size),
+    ("table4", table4_link_model),
+    ("table5", table5_comm_volume),
+    ("pallas", pallas_kernel),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for label, mod in MODULES:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness going; surface the error
+            print(f"{label}/ERROR,,{e!r}")
+            continue
+        print(rows_to_csv(rows))
+        print(f"# {label} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table I: GEMM share of L3 BLAS FLOPs grows with matrix size.
+
+We taskize SYRK/TRSM/TRMM/SYR2K/SYMM at three sizes and account the
+FLOPs of plain GEMM-shaped steps (full-fill multiply-accumulate) vs the
+triangular/symmetric special steps — the tile-algebra version of the
+paper's measurement (their N=5K/10K/20K; scaled to fit CPU taskization
+time, the fraction depends only on N/T).
+"""
+from __future__ import annotations
+
+from repro.core import task as taskmod
+from repro.core.tiling import TileGrid
+
+SIZES = [(2048, "N=2K"), (4096, "N=4K"), (8192, "N=8K")]
+TILE = 256
+
+
+def _grids(n):
+    return (TileGrid("A", n, n, TILE), TileGrid("B", n, n, TILE),
+            TileGrid("Cin", n, n, TILE), TileGrid("C", n, n, TILE))
+
+
+def run():
+    rows = []
+    for n, label in SIZES:
+        ga, gb, gcin, gc = _grids(n)
+        cases = {
+            "syrk": taskmod.taskize_syrk(ga, gc, "U", "N", 1.0, 1.0),
+            "trsm": taskmod.taskize_trsm(ga, gb, gc, "U", "N", "N", 1.0),
+            "trmm": taskmod.taskize_trmm(ga, gcin, gc, "U", "N", "N", 1.0),
+            "syr2k": taskmod.taskize_syr2k(ga, gb, gc, "U", "N", 1.0, 1.0),
+            "symm": taskmod.taskize_symm(ga, gb, gc, "U", 1.0, 1.0),
+        }
+        for routine, tasks in cases.items():
+            frac = taskmod.gemm_fraction(tasks)
+            rows.append({
+                "name": f"table1/{routine}/{label}",
+                "us_per_call": "",
+                "gemm_fraction": f"{frac:.4f}",
+                "n_tasks": len(tasks),
+                "total_gflop": f"{taskmod.total_flops(tasks)/1e9:.1f}",
+            })
+    return rows

@@ -1,0 +1,50 @@
+"""The paper's workload on the TPU mesh: out-of-core distributed GEMM
+with the BLASX ring schedule (L2-cache/overlap insight on ICI).
+
+Spawns with 8 host devices (this example re-execs itself with XLA_FLAGS
+if needed) and compares the ring collective-matmul against the plain
+GSPMD lowering: same numerics, collective-permute (neighbor) traffic
+instead of monolithic all-gathers.
+
+Run:  PYTHONPATH=src python examples/pod_gemm.py
+"""
+import os
+import sys
+
+if "--respawned" not in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+    os.execv(sys.executable, [sys.executable] + sys.argv + ["--respawned"])
+
+import jax                      # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.core import distributed as dist  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((1024, 768)), jnp.float32)
+    want = np.asarray(A @ B)
+
+    for mode in ("gspmd", "ring"):
+        f = jax.jit(lambda a, b, m=mode: dist.distributed_gemm(
+            a, b, mesh, mode=m))
+        compiled = f.lower(A, B).compile()
+        out = compiled(A, B)
+        err = np.abs(np.asarray(out) - want).max()
+        txt = compiled.as_text()
+        print(f"{mode:6s} max|err|={err:.2e} "
+              f"all-gathers={txt.count('all-gather(')} "
+              f"collective-permutes={txt.count('collective-permute')}")
+    print("\nring mode: panels circulate the ICI ring (neighbor P2P, the "
+          "paper's L2 tile cache) with the next hop issued before each "
+          "matmul (the paper's stream overlap).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Mamba2-780M [arXiv:2405.21060; unverified] — SSD, attention-free."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,             # attention-free
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+)

@@ -1,0 +1,14 @@
+"""repro.core — the BLASX reproduction: tile algebra, two-level tile
+caches (ALRU + MESI-X), the locality-aware dynamic scheduling runtime,
+and the public L3 BLAS API."""
+from .blas3 import (gemm, ref_gemm, ref_symm, ref_syr2k, ref_syrk, ref_trmm,
+                    ref_trsm, symm, syr2k, syrk, trmm, trsm)
+from .runtime import BlasxRuntime, RuntimeConfig
+from .tiling import TiledMatrix, TileGrid, TileKey, degree_of_parallelism
+
+__all__ = [
+    "gemm", "syrk", "syr2k", "symm", "trmm", "trsm",
+    "ref_gemm", "ref_syrk", "ref_syr2k", "ref_symm", "ref_trmm", "ref_trsm",
+    "BlasxRuntime", "RuntimeConfig",
+    "TiledMatrix", "TileGrid", "TileKey", "degree_of_parallelism",
+]

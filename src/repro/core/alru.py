@@ -1,0 +1,192 @@
+"""ALRU — Approximate Least-Recently-Used tile cache (paper §IV-B, Alg. 2).
+
+One ALRU per device implements that device's L1 tile cache over its
+private RAM.  The vanilla LRU cannot be used because kernels are
+asynchronous: the least-recent block may still be read by an in-flight
+task.  Each block therefore carries a *reader* counter, atomically
+incremented when a task acquires the tile and decremented at the next
+stream-synchronization point (Alg. 1 line 17 ``ReaderUpdate``).
+Eviction scans from the LRU end toward the front and discards the first
+block with ``reader == 0`` — the *approximate* LRU victim.
+
+The ALRU stores where the tile lives in the device heap
+(``BlasxHeap`` offset = the paper's "GPU address").
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+from .heap import BlasxHeap
+from .tiling import TileKey
+
+
+@dataclasses.dataclass
+class LRUBlock:
+    """One cached tile: host address (tile key), device address (heap
+    offset), byte size, reader count, intrusive list links."""
+
+    host_addr: TileKey
+    gpu_addr: int
+    nbytes: int
+    reader: int = 0
+    prev: Optional["LRUBlock"] = dataclasses.field(default=None, repr=False)
+    next: Optional["LRUBlock"] = dataclasses.field(default=None, repr=False)
+
+
+class Alru:
+    def __init__(self, device_id: int, heap: BlasxHeap):
+        self.device_id = device_id
+        self.heap = heap
+        self._map: Dict[TileKey, LRUBlock] = {}
+        self._front: Optional[LRUBlock] = None  # most recently used
+        self._back: Optional[LRUBlock] = None   # least recently used
+        self._lock = threading.RLock()
+        # instrumentation
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- queries
+    def __contains__(self, key: TileKey) -> bool:
+        with self._lock:
+            return key in self._map
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._map)
+
+    def peek(self, key: TileKey) -> Optional[LRUBlock]:
+        with self._lock:
+            return self._map.get(key)
+
+    def keys(self):
+        with self._lock:
+            return list(self._map.keys())
+
+    # ----------------------------------------------------------- Alg.2 ops
+    def translate(self, key: TileKey, nbytes: int) -> Optional[LRUBlock]:
+        """Alg. 2 ``Translate``: host address -> cached block.
+
+        On a hit the block moves to the front (recency) and is returned.
+        On a miss a new block is allocated (evicting zero-reader LRU
+        blocks as needed) and returned with ``fresh`` semantics: the
+        caller must fill it (i.e. perform the H2D/P2P transfer) and the
+        block's reader is already incremented for the requesting task.
+        Returns None if the cache cannot make room (every block pinned by
+        readers) — the caller synchronizes streams and retries.
+        """
+        with self._lock:
+            block = self._map.get(key)
+            if block is not None:  # cache hit
+                self.hits += 1
+                self._unlink(block)
+                self._push_front(block)
+                block.reader += 1
+                return block
+            # miss: allocate, evicting as needed
+            self.misses += 1
+            gpu_addr = self.heap.malloc(nbytes)
+            while gpu_addr is None:
+                victim = self._dequeue()
+                if victim is None:
+                    return None  # everything pinned; caller must sync
+                self.heap.free(victim.gpu_addr)
+                gpu_addr = self.heap.malloc(nbytes)
+            block = self._enqueue(key, gpu_addr, nbytes)
+            block.reader = 1
+            block.fresh = True  # type: ignore[attr-defined]
+            return block
+
+    def release(self, key: TileKey) -> None:
+        """Reader decrement at a synchronization point (Alg. 1 line 17)."""
+        with self._lock:
+            block = self._map.get(key)
+            if block is None:
+                return  # already evicted after its readers hit zero
+            if block.reader <= 0:
+                raise RuntimeError(f"release underflow on {key}")
+            block.reader -= 1
+
+    def invalidate(self, key: TileKey) -> bool:
+        """MESI-X I transition: drop the tile if present (regardless of
+        recency).  Refuses while readers are active."""
+        with self._lock:
+            block = self._map.get(key)
+            if block is None:
+                return False
+            if block.reader > 0:
+                raise RuntimeError(f"invalidate of in-use tile {key}")
+            self._unlink(block)
+            del self._map[key]
+            self.heap.free(block.gpu_addr)
+            return True
+
+    # ---------------------------------------------------------- internals
+    def _dequeue(self) -> Optional[LRUBlock]:
+        """Alg. 2 ``Dequeue``: walk from the LRU end toward the front and
+        evict the first block with zero readers."""
+        block = self._back
+        while block is not None:
+            if block.reader == 0:
+                self._unlink(block)
+                del self._map[block.host_addr]
+                self.evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(self.device_id, block.host_addr)
+                return block
+            block = block.prev
+        return None
+
+    def _enqueue(self, key: TileKey, gpu_addr: int, nbytes: int) -> LRUBlock:
+        """Alg. 2 ``Enqueue``: new block at the front."""
+        block = LRUBlock(host_addr=key, gpu_addr=gpu_addr, nbytes=nbytes)
+        self._map[key] = block
+        self._push_front(block)
+        return block
+
+    def _push_front(self, block: LRUBlock) -> None:
+        block.prev = None
+        block.next = self._front
+        if self._front is not None:
+            self._front.prev = block
+        self._front = block
+        if self._back is None:
+            self._back = block
+
+    def _unlink(self, block: LRUBlock) -> None:
+        if block.prev is not None:
+            block.prev.next = block.next
+        else:
+            self._front = block.next
+        if block.next is not None:
+            block.next.prev = block.prev
+        else:
+            self._back = block.prev
+        block.prev = block.next = None
+
+    # eviction callback (set by the runtime to keep the MESI-X directory
+    # and the device tile store in sync)
+    on_evict = None
+
+    # ------------------------------------------------------------ checking
+    def check_invariants(self) -> None:
+        with self._lock:
+            seen = set()
+            block = self._front
+            prev = None
+            while block is not None:
+                if block.host_addr in seen:
+                    raise RuntimeError("cycle / duplicate in ALRU list")
+                seen.add(block.host_addr)
+                if block.prev is not prev:
+                    raise RuntimeError("broken prev link")
+                if self._map.get(block.host_addr) is not block:
+                    raise RuntimeError("map out of sync with list")
+                prev = block
+                block = block.next
+            if self._back is not prev:
+                raise RuntimeError("broken back pointer")
+            if len(seen) != len(self._map):
+                raise RuntimeError("list/map size mismatch")

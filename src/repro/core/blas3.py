@@ -1,0 +1,311 @@
+"""Public level-3 BLAS API (paper §III/§IV) — backward compatible, tiled,
+executed by the BLASX runtime.
+
+All six L3 routines are provided with numpy-array in/out semantics so
+legacy BLAS callers can switch by changing an import (the paper's
+"backward compatibility" goal).  ``side='R'`` cases are reduced to the
+native left-side tile algorithms via the transpose identities
+(op(A)^T X^T = alpha B^T), mirroring the paper's §III-C trick at matrix
+granularity.
+
+Every routine also has a ``ref_*`` oracle (pure numpy) used by the test
+suite and benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import task as taskmod
+from .runtime import BlasxRuntime, RuntimeConfig
+from .tiling import TiledMatrix
+
+DEFAULT_TILE = 256
+
+
+def _as2d(x, name):
+    a = np.asarray(x)
+    if a.ndim != 2:
+        raise ValueError(f"{name} must be 2-D, got shape {a.shape}")
+    return a
+
+
+def _runtime(config: Optional[RuntimeConfig]) -> BlasxRuntime:
+    return BlasxRuntime(config or RuntimeConfig(n_devices=1, mode="sim"))
+
+
+def _grids(mats: Dict[str, TiledMatrix]):
+    return {k: m.grid for k, m in mats.items()}
+
+
+# ============================================================== GEMM (1a)
+def gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N",
+         tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    A, B = _as2d(A, "A"), _as2d(B, "B")
+    transa, transb = transa.upper()[0], transb.upper()[0]
+    m = A.shape[0] if transa == "N" else A.shape[1]
+    k = A.shape[1] if transa == "N" else A.shape[0]
+    kb = B.shape[0] if transb == "N" else B.shape[1]
+    n = B.shape[1] if transb == "N" else B.shape[0]
+    if k != kb:
+        raise ValueError(f"inner dims mismatch: {k} vs {kb}")
+    if C is None:
+        if beta != 0.0:
+            raise ValueError("beta != 0 requires C")
+        C = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
+    C = np.array(_as2d(C, "C"), copy=True)
+    if C.shape != (m, n):
+        raise ValueError(f"C shape {C.shape} != ({m},{n})")
+
+    mats = {
+        "A": TiledMatrix("A", A, tile),
+        "B": TiledMatrix("B", B, tile),
+        "C": TiledMatrix("C", C, tile),
+    }
+    tasks = taskmod.taskize_gemm(mats["A"].grid, mats["B"].grid,
+                                 mats["C"].grid, transa, transb, alpha, beta)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ============================================================== SYRK (1b)
+def syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
+         tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    A = _as2d(A, "A")
+    trans = trans.upper()[0]
+    n = A.shape[0] if trans == "N" else A.shape[1]
+    if C is None:
+        if beta != 0.0:
+            raise ValueError("beta != 0 requires C")
+        C = np.zeros((n, n), dtype=A.dtype)
+    C = np.array(_as2d(C, "C"), copy=True)
+    mats = {"A": TiledMatrix("A", A, tile), "C": TiledMatrix("C", C, tile)}
+    tasks = taskmod.taskize_syrk(mats["A"].grid, mats["C"].grid,
+                                 uplo, trans, alpha, beta)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ============================================================= SYR2K (1e)
+def syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
+          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    A, B = _as2d(A, "A"), _as2d(B, "B")
+    trans = trans.upper()[0]
+    n = A.shape[0] if trans == "N" else A.shape[1]
+    if C is None:
+        if beta != 0.0:
+            raise ValueError("beta != 0 requires C")
+        C = np.zeros((n, n), dtype=np.promote_types(A.dtype, B.dtype))
+    C = np.array(_as2d(C, "C"), copy=True)
+    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
+            "C": TiledMatrix("C", C, tile)}
+    tasks = taskmod.taskize_syr2k(mats["A"].grid, mats["B"].grid,
+                                  mats["C"].grid, uplo, trans, alpha, beta)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ============================================================== SYMM (1f)
+def symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U",
+         tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    side = side.upper()[0]
+    A, B = _as2d(A, "A"), _as2d(B, "B")
+    if side == "R":
+        # C = alpha*B*A + beta*C  ==  (alpha*A*B^T + beta*C^T)^T
+        Ct = None if C is None else np.ascontiguousarray(_as2d(C, "C").T)
+        out = symm(A, np.ascontiguousarray(B.T), Ct, alpha=alpha, beta=beta,
+                   side="L", uplo=uplo, tile=tile, config=config,
+                   runtime=runtime)
+        return np.ascontiguousarray(out.T)
+    m, n = B.shape
+    if A.shape != (m, m):
+        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
+    if C is None:
+        if beta != 0.0:
+            raise ValueError("beta != 0 requires C")
+        C = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
+    C = np.array(_as2d(C, "C"), copy=True)
+    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
+            "C": TiledMatrix("C", C, tile)}
+    tasks = taskmod.taskize_symm(mats["A"].grid, mats["B"].grid,
+                                 mats["C"].grid, uplo, alpha, beta)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ============================================================== TRMM (1d)
+def trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
+         tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    side = side.upper()[0]
+    A, B = _as2d(A, "A"), _as2d(B, "B")
+    if side == "R":
+        # B := alpha * B * op(A)  ==  (alpha * op(A)^T * B^T)^T
+        flip = "T" if transa.upper()[0] == "N" else "N"
+        out = trmm(A, np.ascontiguousarray(B.T), alpha=alpha, side="L",
+                   uplo=uplo, transa=flip, diag=diag, tile=tile,
+                   config=config, runtime=runtime)
+        return np.ascontiguousarray(out.T)
+    m, n = B.shape
+    if A.shape != (m, m):
+        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
+    cin = np.array(B, copy=True)   # snapshot: tasks read Cin, write C
+    cout = np.zeros_like(cin)
+    mats = {"A": TiledMatrix("A", A, tile),
+            "Cin": TiledMatrix("Cin", cin, tile),
+            "C": TiledMatrix("C", cout, tile)}
+    tasks = taskmod.taskize_trmm(mats["A"].grid, mats["Cin"].grid,
+                                 mats["C"].grid, uplo, transa, diag, alpha)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ============================================================== TRSM (1c)
+def trsm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
+         tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
+         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
+    side = side.upper()[0]
+    A, B = _as2d(A, "A"), _as2d(B, "B")
+    if side == "R":
+        # solve X*op(A) = alpha*B  ==  op(A)^T X^T = alpha B^T
+        flip = "T" if transa.upper()[0] == "N" else "N"
+        out = trsm(A, np.ascontiguousarray(B.T), alpha=alpha, side="L",
+                   uplo=uplo, transa=flip, diag=diag, tile=tile,
+                   config=config, runtime=runtime)
+        return np.ascontiguousarray(out.T)
+    m, n = B.shape
+    if A.shape != (m, m):
+        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
+    x = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
+    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
+            "C": TiledMatrix("C", x, tile)}
+    tasks = taskmod.taskize_trsm(mats["A"].grid, mats["B"].grid,
+                                 mats["C"].grid, uplo, transa, diag, alpha)
+    rt = runtime or _runtime(config)
+    rt.run(tasks, mats, "C")
+    return mats["C"].data
+
+
+# ==================================================== paper-scale shadows
+def shadow_run(routine: str, n: int, *, tile: int,
+               runtime: BlasxRuntime, k: Optional[int] = None,
+               uplo: str = "U", beta: float = 1.0) -> BlasxRuntime:
+    """Metadata-only run of one L3 routine on square N (A/B/C all NxN,
+    SYRK/SYR2K inner dim ``k`` or N).  Requires a runtime configured
+    with ``execute=False``.  Returns the runtime (ledgers populated)."""
+    from .tiling import ShadowMatrix
+
+    if runtime.cfg.execute:
+        raise ValueError("shadow_run needs RuntimeConfig(execute=False)")
+    k = k or n
+    mats = {
+        "A": ShadowMatrix("A", n, k if routine in ("syrk", "syr2k") else n,
+                          tile),
+        "B": ShadowMatrix("B", n, k if routine == "syr2k" else n, tile),
+        "Cin": ShadowMatrix("Cin", n, n, tile),
+        "C": ShadowMatrix("C", n, n, tile),
+    }
+    g = {m.matrix_id: m.grid for m in mats.values()}
+    if routine == "gemm":
+        tasks = taskmod.taskize_gemm(g["A"], g["B"], g["C"], "N", "N",
+                                     1.0, beta)
+    elif routine == "syrk":
+        tasks = taskmod.taskize_syrk(g["A"], g["C"], uplo, "N", 1.0, beta)
+    elif routine == "syr2k":
+        tasks = taskmod.taskize_syr2k(g["A"], g["B"], g["C"], uplo, "N",
+                                      1.0, beta)
+    elif routine == "symm":
+        tasks = taskmod.taskize_symm(g["A"], g["B"], g["C"], uplo, 1.0, beta)
+    elif routine == "trmm":
+        tasks = taskmod.taskize_trmm(g["A"], g["Cin"], g["C"], uplo, "N",
+                                     "N", 1.0)
+    elif routine == "trsm":
+        tasks = taskmod.taskize_trsm(g["A"], g["B"], g["C"], uplo, "N",
+                                     "N", 1.0)
+    else:
+        raise ValueError(routine)
+    runtime.run(tasks, mats, "C")
+    return runtime
+
+
+# ====================================================== reference oracles
+def ref_gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N"):
+    opa = A if transa.upper()[0] == "N" else A.T
+    opb = B if transb.upper()[0] == "N" else B.T
+    out = alpha * (opa @ opb)
+    if C is not None and beta != 0.0:
+        out = out + beta * C
+    return out
+
+
+def _sym(A, uplo):
+    if uplo.upper()[0] == "U":
+        return np.triu(A) + np.triu(A, 1).T
+    return np.tril(A) + np.tril(A, -1).T
+
+
+def _tri(A, uplo, diag):
+    t = np.triu(A) if uplo.upper()[0] == "U" else np.tril(A)
+    if diag.upper()[0] == "U":
+        np.fill_diagonal(t, 1.0)
+    return t
+
+
+def ref_syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
+    full = alpha * (A @ A.T if trans.upper()[0] == "N" else A.T @ A)
+    n = full.shape[0]
+    base = np.zeros((n, n), full.dtype) if C is None else beta * np.asarray(C)
+    out = np.array(np.zeros((n, n), full.dtype) if C is None else np.asarray(C),
+                   dtype=full.dtype, copy=True)
+    mask = np.triu(np.ones((n, n), bool)) if uplo.upper()[0] == "U" \
+        else np.tril(np.ones((n, n), bool))
+    out[mask] = (full + base)[mask]
+    return out
+
+
+def ref_syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
+    if trans.upper()[0] == "N":
+        full = alpha * (A @ B.T) + alpha * (B @ A.T)
+    else:
+        full = alpha * (A.T @ B) + alpha * (B.T @ A)
+    n = full.shape[0]
+    base = np.zeros((n, n), full.dtype) if C is None else beta * np.asarray(C)
+    out = np.array(np.zeros((n, n), full.dtype) if C is None else np.asarray(C),
+                   dtype=full.dtype, copy=True)
+    mask = np.triu(np.ones((n, n), bool)) if uplo.upper()[0] == "U" \
+        else np.tril(np.ones((n, n), bool))
+    out[mask] = (full + base)[mask]
+    return out
+
+
+def ref_symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U"):
+    sa = _sym(A, uplo)
+    prod = sa @ B if side.upper()[0] == "L" else B @ sa
+    out = alpha * prod
+    if C is not None and beta != 0.0:
+        out = out + beta * np.asarray(C)
+    return out
+
+
+def ref_trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N"):
+    ta = _tri(A, uplo, diag)
+    opa = ta if transa.upper()[0] == "N" else ta.T
+    return alpha * (opa @ B if side.upper()[0] == "L" else B @ opa)
+
+
+def ref_trsm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N"):
+    ta = _tri(A, uplo, diag)
+    opa = ta if transa.upper()[0] == "N" else ta.T
+    if side.upper()[0] == "L":
+        return np.linalg.solve(opa, alpha * np.asarray(B))
+    return np.linalg.solve(opa.T, alpha * np.asarray(B).T).T

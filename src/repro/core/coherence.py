@@ -1,0 +1,111 @@
+"""MESI-X cache-coherence protocol for the two-level tile cache
+(paper §IV-B, Fig. 3).
+
+States are *derived* from the set of ALRUs tracking a tile:
+
+  E (exclusive) — exactly one device's ALRU holds the tile
+  S (shared)    — more than one device's ALRU holds it
+  I (invalid)   — no ALRU holds it (tile lives only in host RAM)
+  M (modified)  — ephemeral: a device wrote a C_ij tile; it is written
+                  back to host RAM immediately and transitions to I.
+
+The directory maps each tile key to its holder set; it also answers
+L2-cache queries: "which *peer* device (same P2P group) holds this
+tile?".  All mutations are lock-guarded — the paper's runtime does the
+same with atomics.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Set
+
+from .tiling import TileKey
+
+STATE_E = "E"
+STATE_S = "S"
+STATE_I = "I"
+STATE_M = "M"  # ephemeral; never observable at rest
+
+
+class MesixDirectory:
+    def __init__(self, n_devices: int, p2p_groups: Sequence[Sequence[int]]):
+        """``p2p_groups`` — lists of device ids sharing a PCI-E switch /
+        ICI neighborhood; L2 hits are only served within a group."""
+        self.n_devices = n_devices
+        self._holders: Dict[TileKey, Set[int]] = {}
+        self._lock = threading.RLock()
+        self._group_of: Dict[int, int] = {}
+        for gid, group in enumerate(p2p_groups):
+            for dev in group:
+                self._group_of[dev] = gid
+        for dev in range(n_devices):
+            self._group_of.setdefault(dev, -1 - dev)  # isolated device
+        # instrumentation
+        self.writebacks = 0
+        self.invalidations = 0
+
+    # ------------------------------------------------------------- queries
+    def state(self, key: TileKey) -> str:
+        with self._lock:
+            holders = self._holders.get(key)
+            if not holders:
+                return STATE_I
+            return STATE_E if len(holders) == 1 else STATE_S
+
+    def holders(self, key: TileKey) -> Set[int]:
+        with self._lock:
+            return set(self._holders.get(key, ()))
+
+    def peer_holder(self, key: TileKey, device_id: int) -> Optional[int]:
+        """L2 tile-cache lookup: a device in the *same* P2P group holding
+        the tile (excluding the requester).  Returns the first such
+        device or None (=> must fetch from host)."""
+        gid = self._group_of[device_id]
+        with self._lock:
+            for dev in sorted(self._holders.get(key, ())):
+                if dev != device_id and self._group_of[dev] == gid:
+                    return dev
+            return None
+
+    def same_group(self, a: int, b: int) -> bool:
+        return self._group_of[a] == self._group_of[b]
+
+    # ----------------------------------------------------------- mutations
+    def on_fill(self, key: TileKey, device_id: int) -> str:
+        """A device cached the tile (I->E, E->S, S->S)."""
+        with self._lock:
+            holders = self._holders.setdefault(key, set())
+            holders.add(device_id)
+            return STATE_E if len(holders) == 1 else STATE_S
+
+    def on_evict(self, key: TileKey, device_id: int) -> str:
+        """A device's ALRU dropped the tile (S->S/E, E->I)."""
+        with self._lock:
+            holders = self._holders.get(key)
+            if holders is not None:
+                holders.discard(device_id)
+                if not holders:
+                    del self._holders[key]
+            return self.state(key)
+
+    def on_write(self, key: TileKey, device_id: int) -> List[int]:
+        """MESI-X write: a device produced a C_ij tile.  The M state is
+        ephemeral — the caller writes the tile back to host RAM and we
+        invalidate *all* cached copies (including the writer's), i.e.
+        M -> I immediately (Fig. 3).  Returns the list of devices whose
+        copies were invalidated, so the runtime can purge their ALRUs."""
+        with self._lock:
+            holders = sorted(self._holders.pop(key, ()))
+            self.writebacks += 1
+            self.invalidations += len(holders)
+            return holders
+
+    # ------------------------------------------------------------ checking
+    def check_invariants(self) -> None:
+        with self._lock:
+            for key, holders in self._holders.items():
+                if not holders:
+                    raise RuntimeError(f"empty holder set kept for {key}")
+                for dev in holders:
+                    if not (0 <= dev < self.n_devices):
+                        raise RuntimeError(f"bogus device {dev} holds {key}")

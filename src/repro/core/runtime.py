@@ -1,0 +1,510 @@
+"""The BLASX locality-aware dynamic scheduling runtime (paper §IV, Alg. 1).
+
+Two execution modes share every data structure (ALRU, MESI-X directory,
+heap, reservation stations, global ready queue, communication ledger):
+
+  * ``threads`` — faithful to the paper: one host thread per device,
+    demand-driven work sharing off the global queue, work stealing from
+    peer reservation stations, asynchronous batch execution with
+    reader-count release at the stream-sync point.
+  * ``sim``     — a deterministic virtual-clock engine over the same
+    components.  Devices consume tasks in earliest-free-time order
+    (exactly the paper's "demand driven" behaviour, but reproducible),
+    and per-batch time is modeled from device speed and link bandwidth.
+    All Table III/V and Fig. 7/8/10 analogues run in this mode.
+
+Scheduling policies (the paper's baselines are implemented, §II):
+
+  * ``blasx``       — dynamic demand + stealing + Eq. 3 locality priority,
+                      L1+L2 tile caches (the paper's contribution);
+  * ``parsec``      — dynamic demand, L1 cache only, FIFO priority
+                      (h-PaRSEC-like: no inter-GPU cache);
+  * ``cublasxt``    — static round-robin tile assignment, NO tile cache
+                      (on-demand transfer per k-step), 2 streams;
+  * ``static``      — MAGMA-like static contiguous split proportional to
+                      device speed, L1 cache, no stealing;
+  * ``supermatrix`` — dynamic demand, no cache, fork-join (no
+                      communication/computation overlap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .alru import Alru
+from .coherence import MesixDirectory
+from .heap import BlasxHeap
+from .task import Task, TileRef
+from .taskqueue import ReadyQueue, ReservationStation
+from .tile_kernels import MATMULS, get_solver, materialize
+from .tiling import TiledMatrix, TileKey
+
+# paper Table IV: measured DMA throughputs on Everest
+H2D_BW = 6.54e9   # bytes/s, bidirectional host <-> device
+D2D_BW = 7.80e9   # bytes/s, GPU <-> GPU peer
+DEFAULT_PEAK_FLOPS = 1.43e12  # K40c double-precision-ish peak (paper §V-A)
+
+# sentinel payload used by metadata-only runs (execute=False)
+_METADATA_ONLY = np.empty(0)
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    n_devices: int = 2
+    cache_bytes: int = 256 << 20          # per-device L1 tile-cache capacity
+    n_streams: int = 4                    # paper: 4 concurrent tasks/streams
+    rs_slots: Optional[int] = None        # RS capacity (default 2*n_streams)
+    policy: str = "blasx"
+    kernel: str = "numpy"                 # numpy | jax | pallas
+    speeds: Optional[Sequence[float]] = None   # realtime device speeds
+    # what a static scheduler *believes* the speeds are (MAGMA/PaRSEC
+    # assume constant nominal speed; realtime saturation differs — §IV-C)
+    nominal_speeds: Optional[Sequence[float]] = None
+    p2p_groups: Optional[Sequence[Sequence[int]]] = None  # default: one group
+    mode: str = "sim"                     # sim | threads
+    peak_flops: float = DEFAULT_PEAK_FLOPS
+    h2d_bw: float = H2D_BW
+    d2d_bw: float = D2D_BW
+    # all devices share the host PCI-E root complex: concurrent H2D
+    # transfers contend (the paper's "cuBLAS-XT overloads the PCI-E").
+    # P2P transfers ride dedicated switch lanes and do not contend.
+    shared_host_link: bool = True
+    # execute=False: metadata-only run — full scheduling/cache/ledger
+    # behaviour, no numerics.  Lets benchmarks run at the paper's true
+    # scale (N=16384..40K, T=1024) on this 1-core host.
+    execute: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.policy not in ("blasx", "parsec", "cublasxt", "static",
+                               "supermatrix"):
+            raise ValueError(f"unknown policy {self.policy}")
+        if self.speeds is None:
+            self.speeds = [1.0] * self.n_devices
+        if len(self.speeds) != self.n_devices:
+            raise ValueError("speeds length != n_devices")
+        if self.nominal_speeds is None:
+            self.nominal_speeds = list(self.speeds)
+        if self.rs_slots is None:
+            self.rs_slots = 2 * self.n_streams
+        if self.p2p_groups is None:
+            self.p2p_groups = [list(range(self.n_devices))]
+
+    @property
+    def use_cache(self) -> bool:
+        return self.policy in ("blasx", "parsec", "static")
+
+    @property
+    def use_l2(self) -> bool:
+        return self.policy == "blasx"
+
+    @property
+    def use_priority(self) -> bool:
+        return self.policy == "blasx"
+
+    @property
+    def use_stealing(self) -> bool:
+        return self.policy in ("blasx", "parsec", "supermatrix")
+
+    @property
+    def static_assignment(self) -> Optional[str]:
+        return {"cublasxt": "roundrobin", "static": "speed"}.get(self.policy)
+
+    @property
+    def overlap(self) -> bool:
+        return self.policy != "supermatrix"
+
+    @property
+    def h2d_bw_eff(self) -> float:
+        """Per-device host bandwidth under contention."""
+        return self.h2d_bw / (self.n_devices if self.shared_host_link
+                              else 1)
+
+    @property
+    def effective_streams(self) -> int:
+        return 2 if self.policy == "cublasxt" else self.n_streams
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Per-device communication/compute accounting (Tables IV/V, Fig. 8)."""
+
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    d2d_bytes: int = 0
+    tasks: int = 0
+    steals: int = 0
+    flops: int = 0
+    compute_time: float = 0.0     # modeled seconds
+    comm_time: float = 0.0        # modeled seconds (total, incl. overlapped)
+    unoverlapped_comm: float = 0.0  # Fig. 8 "COMM"
+    busy_time: float = 0.0        # modeled wall contribution
+
+
+class DeviceSim:
+    """One simulated accelerator: private heap + ALRU (L1 tile cache) +
+    tile store (the actual bytes) + ledger."""
+
+    def __init__(self, device_id: int, cfg: RuntimeConfig,
+                 directory: MesixDirectory):
+        self.id = device_id
+        self.cfg = cfg
+        self.speed = float(cfg.speeds[device_id])
+        self.heap = BlasxHeap(cfg.cache_bytes)
+        self.alru = Alru(device_id, self.heap)
+        self.store: Dict[TileKey, np.ndarray] = {}
+        self.ledger = Ledger()
+        self.rs = ReservationStation(device_id, cfg.rs_slots)
+        self.clock = 0.0  # sim-mode virtual time
+        self._directory = directory
+
+        def _on_evict(dev_id: int, key: TileKey) -> None:
+            directory.on_evict(key, dev_id)
+            self.store.pop(key, None)
+
+        self.alru.on_evict = _on_evict
+
+
+class BlasxRuntime:
+    """Executes a taskized L3 BLAS call over simulated devices (Alg. 1)."""
+
+    def __init__(self, cfg: RuntimeConfig):
+        self.cfg = cfg
+        self.directory = MesixDirectory(cfg.n_devices, cfg.p2p_groups)
+        self.devices = [DeviceSim(d, cfg, self.directory)
+                        for d in range(cfg.n_devices)]
+        self._matmul = MATMULS[cfg.kernel]
+        self._solver = get_solver()
+
+    # ------------------------------------------------------------- public
+    def run(self, tasks: Sequence[Task], matrices: Dict[str, TiledMatrix],
+            out_id: str) -> None:
+        """Execute all tasks; the output matrix (``matrices[out_id]``) is
+        updated in place tile by tile."""
+        self._matrices = matrices
+        self._out_id = out_id
+        if self.cfg.static_assignment:
+            queues = self._static_split(tasks)
+            self._queue = None
+            self._static_queues = queues
+        else:
+            self._queue = ReadyQueue(tasks)
+            self._static_queues = None
+        self._completed: Dict[int, float] = {}
+        if self.cfg.mode == "threads":
+            self._run_threads(tasks)
+        else:
+            self._run_sim(tasks)
+
+    # ----------------------------------------------------- static policies
+    def _static_split(self, tasks: Sequence[Task]) -> List[ReadyQueue]:
+        n = self.cfg.n_devices
+        buckets: List[List[Task]] = [[] for _ in range(n)]
+        if self.cfg.static_assignment == "roundrobin":
+            for idx, t in enumerate(tasks):
+                buckets[idx % n].append(t)
+        else:  # contiguous split proportional to NOMINAL speed (MAGMA-like)
+            total_speed = sum(self.cfg.nominal_speeds)
+            total_fl = sum(t.flops for t in tasks) or 1
+            shares = [s / total_speed for s in self.cfg.nominal_speeds]
+            acc = 0.0
+            dev = 0
+            budget = shares[0] * total_fl
+            for t in tasks:
+                if acc > budget and dev < n - 1:
+                    dev += 1
+                    budget += shares[dev] * total_fl
+                buckets[dev].append(t)
+                acc += t.flops
+        # NB: a static split cannot respect TRSM chains across devices;
+        # ReadyQueue still enforces them (a device may stall — exactly the
+        # pathology the paper ascribes to static scheduling).
+        return [ReadyQueue(b) for b in buckets]
+
+    # --------------------------------------------------------------- sim
+    def _run_sim(self, tasks: Sequence[Task]) -> None:
+        n_left = len(tasks)
+        stall_guard = 0
+        active = set(range(self.cfg.n_devices))
+        while n_left > 0:
+            d = min((self.devices[i] for i in active),
+                    key=lambda x: (x.clock, x.id))
+            batch = self._fill_and_take(d)
+            if not batch:
+                # will this device ever get work again?
+                if len(d.rs) == 0 and not self.cfg.use_stealing:
+                    src = (self._static_queues[d.id]
+                           if self._static_queues is not None else self._queue)
+                    if src.drained() and not src.has_ready():
+                        active.discard(d.id)
+                        if not active:
+                            raise RuntimeError("all devices retired with "
+                                               f"{n_left} tasks left")
+                        continue
+                stall_guard += 1
+                if stall_guard > 8 * self.cfg.n_devices + 64:
+                    raise RuntimeError(
+                        "scheduler livelock: pending dependencies never "
+                        "resolved (task DAG cycle?)")
+                # nudge the starved device's clock past the next busy one
+                busy = [self.devices[i].clock for i in active
+                        if self.devices[i] is not d]
+                d.clock = max(d.clock, min(busy) if busy else d.clock) + 1e-9
+                continue
+            stall_guard = 0
+            ready_at = max((self._completed.get(dep, 0.0)
+                            for t in batch for dep in t.deps), default=0.0)
+            start = max(d.clock, ready_at)
+            dur = self._execute_batch(d, batch)
+            d.clock = start + dur
+            d.ledger.busy_time += dur
+            for t in batch:
+                self._completed[t.task_id] = d.clock
+                self._complete(t)
+                n_left -= 1
+
+    def _pick_device(self) -> DeviceSim:
+        return min(self.devices, key=lambda d: (d.clock, d.id))
+
+    # ------------------------------------------------------------ threads
+    def _run_threads(self, tasks: Sequence[Task]) -> None:
+        n_left = [len(tasks)]
+        lock = threading.Lock()
+        errors: List[BaseException] = []
+
+        def worker(d: DeviceSim) -> None:
+            try:
+                while True:
+                    with lock:
+                        if n_left[0] <= 0:
+                            return
+                    batch = self._fill_and_take(d)
+                    if not batch:
+                        time.sleep(0.0005)
+                        continue
+                    t0 = time.perf_counter()
+                    self._execute_batch(d, batch)
+                    d.ledger.busy_time += time.perf_counter() - t0
+                    with lock:
+                        for t in batch:
+                            self._complete(t)
+                            n_left[0] -= 1
+            except BaseException as e:  # surface worker crashes
+                errors.append(e)
+                with lock:
+                    n_left[0] = 0
+
+        threads = [threading.Thread(target=worker, args=(d,), daemon=True)
+                   for d in self.devices]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+
+    # ------------------------------------------------- scheduling plumbing
+    def _dequeue_for(self, d: DeviceSim) -> Optional[Task]:
+        if self._static_queues is not None:
+            return self._static_queues[d.id].try_dequeue()
+        return self._queue.try_dequeue()
+
+    def _complete(self, t: Task) -> None:
+        if self._static_queues is not None:
+            for q in self._static_queues:
+                q.complete(t)  # owner decrements; others resolve dep edges
+        else:
+            self._queue.complete(t)
+
+    def _fill_and_take(self, d: DeviceSim) -> List[Task]:
+        # work sharing: refill RS from the global (or static) queue
+        while d.rs.free_slots() > 0:
+            t = self._dequeue_for(d)
+            if t is None:
+                break
+            d.rs.put(t, self._priority(d, t))
+        # work stealing: only when RS is empty and the queue gave nothing
+        if len(d.rs) == 0 and self.cfg.use_stealing:
+            victim = max((x for x in self.devices if x is not d),
+                         key=lambda x: len(x.rs), default=None)
+            if victim is not None and len(victim.rs) > 0:
+                stolen = victim.rs.steal()
+                if stolen is not None:
+                    d.rs.put(stolen, self._priority(d, stolen))
+                    d.ledger.steals += 1
+        if len(d.rs) == 0:
+            return []
+        if self.cfg.use_priority:
+            d.rs.set_priorities(lambda t: self._priority(d, t))
+        return d.rs.take_top(self.cfg.effective_streams)
+
+    def _priority(self, d: DeviceSim, t: Task) -> float:
+        """Eq. 3: +2 per L1-resident input tile, +1 per L2 (peer) tile."""
+        if not self.cfg.use_priority:
+            return 0.0
+        p = 0.0
+        for ref in t.input_refs():
+            if ref.key in d.alru:
+                p += 2.0
+            elif self.cfg.use_l2 and \
+                    self.directory.peer_holder(ref.key, d.id) is not None:
+                p += 1.0
+        return p
+
+    # ----------------------------------------------------------- execution
+    def _execute_batch(self, d: DeviceSim, batch: List[Task]) -> float:
+        """Run up to ``n_streams`` tasks as one overlapped batch; returns
+        the modeled duration.  Readers are released at the end — the
+        paper's StreamsSynch + ReaderUpdate point."""
+        acquired: List[TileKey] = []
+        comm_s = 0.0
+        compute_s = 0.0
+        for t in batch:
+            comm1, flops1 = self._execute_task(d, t, acquired)
+            comm_s += comm1
+            compute_s += flops1 / (d.speed * self.cfg.peak_flops)
+            d.ledger.tasks += 1
+            d.ledger.flops += flops1
+        # reader update (the ALRU may evict these from now on)
+        for key in acquired:
+            d.alru.release(key)
+        d.ledger.compute_time += compute_s
+        d.ledger.comm_time += comm_s
+        if self.cfg.overlap:
+            d.ledger.unoverlapped_comm += max(0.0, comm_s - compute_s)
+            return max(compute_s, comm_s)
+        d.ledger.unoverlapped_comm += comm_s
+        return compute_s + comm_s
+
+    def _execute_task(self, d: DeviceSim, t: Task,
+                      acquired: List[TileKey]) -> Tuple[float, int]:
+        comm_s = 0.0
+        out_grid = self._matrices[self._out_id]
+        acc: Optional[np.ndarray] = None
+        for step in t.steps:
+            a, s1 = self._acquire(d, step.a, acquired)
+            b, s2 = self._acquire(d, step.b, acquired)
+            comm_s += s1 + s2
+            if self.cfg.execute:
+                prod = self._matmul(a, b)
+                acc = prod if acc is None else acc + prod
+        if acc is None and self.cfg.execute:
+            h, w = out_grid.grid.tile_shape(t.i, t.j)
+            acc = np.zeros((h, w), dtype=out_grid.data.dtype)
+
+        if t.finalize is not None:  # TRSM
+            diag, s1 = self._acquire(d, t.finalize.diag_ref, acquired)
+            comm_s += s1
+            rhs, s2 = self._bypass_read(d, t.finalize.rhs_ref)
+            comm_s += s2
+            if self.cfg.execute:
+                result = self._solver(diag, t.alpha * rhs - acc,
+                                      lower=t.finalize.lower,
+                                      unit_diag=t.finalize.unit_diag)
+        else:
+            if self.cfg.execute:
+                result = t.alpha * acc
+            if t.read_c is not None:
+                cin, s3 = self._bypass_read(d, t.read_c)
+                comm_s += s3
+                if self.cfg.execute:
+                    result = result + t.beta * cin
+
+        if self.cfg.execute and t.out_mask is not None:
+            # diagonal SYRK/SYR2K tile: only the uplo triangle is written
+            orig = out_grid.read_tile(t.i, t.j)
+            if t.out_mask == "tri_u":
+                result = np.triu(result) + np.tril(orig, -1)
+            else:
+                result = np.tril(result) + np.triu(orig, 1)
+        # MESI-X ephemeral M: write back to host immediately, invalidate
+        # any cached copies, transition to I (Fig. 3).
+        for holder in self.directory.on_write(t.out, d.id):
+            self.devices[holder].alru.invalidate(t.out)
+        if self.cfg.execute:
+            out_grid.write_tile(t.i, t.j, result.astype(out_grid.data.dtype))
+        wb = out_grid.nbytes(t.i, t.j)
+        d.ledger.d2h_bytes += wb
+        comm_s += wb / self.cfg.h2d_bw_eff
+        return comm_s, t.flops
+
+    # ------------------------------------------------------ data movement
+    def _acquire(self, d: DeviceSim, ref: TileRef,
+                 acquired: List[TileKey]) -> Tuple[np.ndarray, float]:
+        """Fetch a cacheable input tile through the 2-level tile cache."""
+        key = ref.key
+        mat = self._matrices[key.matrix_id]
+        nbytes = mat.nbytes(key.i, key.j)
+        if not self.cfg.use_cache:
+            data, secs = self._bypass_read(d, ref)
+            return data, secs
+
+        block = d.alru.translate(key, nbytes)
+        if block is None:
+            # every cached block pinned: degrade to an uncached read
+            data, secs = self._bypass_read(d, ref)
+            return data, secs
+        acquired.append(key)
+        secs = 0.0
+        if getattr(block, "fresh", False):
+            block.fresh = False
+            peer = (self.directory.peer_holder(key, d.id)
+                    if self.cfg.use_l2 else None)
+            payload = None
+            if peer is not None:
+                payload = self.devices[peer].store.get(key)
+            if payload is not None:  # L2 tile-cache hit: P2P fetch
+                d.ledger.d2d_bytes += nbytes
+                secs = nbytes / self.cfg.d2d_bw
+            else:                    # miss in both levels: host fetch
+                payload = (mat.read_tile(key.i, key.j).copy()
+                           if self.cfg.execute else _METADATA_ONLY)
+                d.ledger.h2d_bytes += nbytes
+                secs = nbytes / self.cfg.h2d_bw_eff
+            d.store[key] = payload
+            self.directory.on_fill(key, d.id)
+        data = d.store.get(key)
+        if data is None:  # extremely unlikely: evicted between ops
+            data = mat.read_tile(key.i, key.j).copy() if self.cfg.execute \
+                else _METADATA_ONLY
+            d.ledger.h2d_bytes += nbytes
+            secs += nbytes / self.cfg.h2d_bw_eff
+        if not self.cfg.execute:
+            return data, secs
+        return materialize(data, ref), secs
+
+    def _bypass_read(self, d: DeviceSim, ref: TileRef) -> Tuple[np.ndarray, float]:
+        """Uncached host read (C_ij inputs / no-cache policies)."""
+        key = ref.key
+        mat = self._matrices[key.matrix_id]
+        nbytes = mat.nbytes(key.i, key.j)
+        d.ledger.h2d_bytes += nbytes
+        if not self.cfg.execute:
+            return _METADATA_ONLY, nbytes / self.cfg.h2d_bw_eff
+        return materialize(mat.read_tile(key.i, key.j), ref), nbytes / self.cfg.h2d_bw_eff
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for d in self.devices:
+            led = dataclasses.asdict(d.ledger)
+            led.update(l1_hits=d.alru.hits, l1_misses=d.alru.misses,
+                       evictions=d.alru.evictions,
+                       cache_used=d.heap.used, clock=d.clock)
+            out[f"device{d.id}"] = led
+        return out
+
+    def total_comm_bytes(self) -> Dict[str, int]:
+        return {
+            "h2d": sum(d.ledger.h2d_bytes for d in self.devices),
+            "d2h": sum(d.ledger.d2h_bytes for d in self.devices),
+            "d2d": sum(d.ledger.d2d_bytes for d in self.devices),
+        }
+
+    def makespan(self) -> float:
+        """Sim-mode modeled wall time (max device clock)."""
+        return max((d.clock for d in self.devices), default=0.0)

@@ -1,0 +1,124 @@
+"""Per-tile compute kernels for the threaded/simulated runtime.
+
+The runtime is kernel-pluggable:
+  * ``numpy``  — host BLAS via np.dot (default for the reproduction
+                 engine: fast, multi-thread safe);
+  * ``jax``    — jitted jnp.dot (per-tile XLA kernels);
+  * ``pallas`` — the repro Pallas matmul in interpret mode (used by
+                 tests to prove the TPU kernel composes with the
+                 runtime; slow on CPU).
+
+Fill modifiers realize triangular/symmetric *storage* semantics: stored
+tiles are always dense, only the ``uplo`` triangle is meaningful, so we
+mask/symmetrize on load (before the §III-C transpose trick).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import task as task_mod
+from .task import (FILL_FULL, FILL_SYM_L, FILL_SYM_U, FILL_TRI_L,
+                   FILL_TRI_LU, FILL_TRI_U, FILL_TRI_UU, TileRef)
+
+
+def apply_fill(tile: np.ndarray, fill: str) -> np.ndarray:
+    if fill == FILL_FULL:
+        return tile
+    if fill == FILL_SYM_U:
+        u = np.triu(tile)
+        return u + np.triu(tile, 1).T
+    if fill == FILL_SYM_L:
+        l = np.tril(tile)
+        return l + np.tril(tile, -1).T
+    if fill == FILL_TRI_U:
+        return np.triu(tile)
+    if fill == FILL_TRI_L:
+        return np.tril(tile)
+    if fill == FILL_TRI_UU:
+        t = np.triu(tile, 1)
+        return t + np.eye(tile.shape[0], tile.shape[1], dtype=tile.dtype)
+    if fill == FILL_TRI_LU:
+        t = np.tril(tile, -1)
+        return t + np.eye(tile.shape[0], tile.shape[1], dtype=tile.dtype)
+    raise ValueError(f"unknown fill {fill}")
+
+
+def materialize(tile: np.ndarray, ref: TileRef) -> np.ndarray:
+    out = apply_fill(tile, ref.fill)
+    if ref.trans:
+        out = out.T
+    return out
+
+
+# ----------------------------------------------------------------- kernels
+def _matmul_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.dot(a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_dot():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def dot(a, b):
+        return jnp.dot(a, b, preferred_element_type=jnp.float64
+                       if a.dtype == jnp.float64 else jnp.float32)
+
+    return dot
+
+
+def _matmul_jax(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.asarray(_jax_dot()(a, b))
+
+
+def _matmul_pallas(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    from ..kernels import ops as kops
+
+    return np.asarray(kops.matmul(a, b, interpret=True))
+
+
+MATMULS = {
+    "numpy": _matmul_numpy,
+    "jax": _matmul_jax,
+    "pallas": _matmul_pallas,
+}
+
+
+def solve_triangular(a: np.ndarray, b: np.ndarray, lower: bool,
+                     unit_diag: bool) -> np.ndarray:
+    """Tile-level triangular solve for the TRSM finalize step."""
+    import scipy.linalg  # local import; only TRSM needs it
+
+    return scipy.linalg.solve_triangular(
+        a, b, lower=lower, unit_diagonal=unit_diag, check_finite=False)
+
+
+def solve_triangular_np(a: np.ndarray, b: np.ndarray, lower: bool,
+                        unit_diag: bool) -> np.ndarray:
+    """Pure-numpy fallback when scipy is unavailable: forward/back
+    substitution at tile granularity (row blocks of 1)."""
+    n = a.shape[0]
+    x = np.array(b, dtype=np.promote_types(a.dtype, b.dtype), copy=True)
+    rng = range(n) if lower else range(n - 1, -1, -1)
+    for r in rng:
+        if lower:
+            if r > 0:
+                x[r] -= a[r, :r] @ x[:r]
+        else:
+            if r < n - 1:
+                x[r] -= a[r, r + 1:] @ x[r + 1:]
+        if not unit_diag:
+            x[r] /= a[r, r]
+    return x
+
+
+def get_solver():
+    try:
+        import scipy.linalg  # noqa: F401
+
+        return solve_triangular
+    except ImportError:  # pragma: no cover
+        return solve_triangular_np

@@ -1,0 +1,145 @@
+"""Tile representation of matrices (paper §III-A).
+
+A matrix of shape (M, N) with tile size T is logically partitioned into
+ceil(M/T) x ceil(N/T) tiles; interior tiles are T x T, edge tiles are
+ragged.  Tiles are identified by ``TileKey(matrix_id, i, j)`` — the
+"host address" of the paper's runtime.  The runtime never copies the
+full matrix; tasks carry tile keys and the engine materializes tile
+views on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TileKey:
+    """Unique identity of one tile: which matrix, which (row, col) block."""
+
+    matrix_id: str
+    i: int
+    j: int
+
+    def __repr__(self) -> str:  # compact, used in ledgers/logs
+        return f"{self.matrix_id}[{self.i},{self.j}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGrid:
+    """Tile decomposition of one matrix (paper §III-A)."""
+
+    matrix_id: str
+    rows: int
+    cols: int
+    tile: int
+
+    @property
+    def n_tile_rows(self) -> int:
+        return max(1, math.ceil(self.rows / self.tile))
+
+    @property
+    def n_tile_cols(self) -> int:
+        return max(1, math.ceil(self.cols / self.tile))
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_tile_rows * self.n_tile_cols
+
+    def tile_shape(self, i: int, j: int) -> Tuple[int, int]:
+        """Shape of tile (i, j); edge tiles are ragged."""
+        self._check(i, j)
+        h = min(self.tile, self.rows - i * self.tile)
+        w = min(self.tile, self.cols - j * self.tile)
+        return (h, w)
+
+    def tile_slice(self, i: int, j: int) -> Tuple[slice, slice]:
+        self._check(i, j)
+        r0 = i * self.tile
+        c0 = j * self.tile
+        h, w = self.tile_shape(i, j)
+        return (slice(r0, r0 + h), slice(c0, c0 + w))
+
+    def key(self, i: int, j: int) -> TileKey:
+        self._check(i, j)
+        return TileKey(self.matrix_id, i, j)
+
+    def nbytes(self, i: int, j: int, itemsize: int = 8) -> int:
+        h, w = self.tile_shape(i, j)
+        return h * w * itemsize
+
+    def keys(self) -> Iterator[TileKey]:
+        for i in range(self.n_tile_rows):
+            for j in range(self.n_tile_cols):
+                yield self.key(i, j)
+
+    def _check(self, i: int, j: int) -> None:
+        if not (0 <= i < self.n_tile_rows and 0 <= j < self.n_tile_cols):
+            raise IndexError(
+                f"tile ({i},{j}) out of grid "
+                f"{self.n_tile_rows}x{self.n_tile_cols} of {self.matrix_id}"
+            )
+
+
+class TiledMatrix:
+    """A matrix plus its tile grid.  Host-resident (paper: matrices stay in
+    host RAM; GPUs operate out-of-core on tiles)."""
+
+    def __init__(self, matrix_id: str, data, tile: int):
+        self.data = np.asarray(data)
+        if self.data.ndim != 2:
+            raise ValueError(f"{matrix_id}: expected 2-D, got {self.data.shape}")
+        self.grid = TileGrid(matrix_id, self.data.shape[0], self.data.shape[1], tile)
+
+    @property
+    def matrix_id(self) -> str:
+        return self.grid.matrix_id
+
+    def read_tile(self, i: int, j: int) -> np.ndarray:
+        rs, cs = self.grid.tile_slice(i, j)
+        return self.data[rs, cs]
+
+    def write_tile(self, i: int, j: int, value: np.ndarray) -> None:
+        rs, cs = self.grid.tile_slice(i, j)
+        expected = self.grid.tile_shape(i, j)
+        if tuple(value.shape) != expected:
+            raise ValueError(
+                f"write_tile({i},{j}): shape {value.shape} != {expected}"
+            )
+        self.data[rs, cs] = value
+
+    def nbytes(self, i: int, j: int) -> int:
+        return self.grid.nbytes(i, j, self.data.itemsize)
+
+
+class ShadowMatrix:
+    """Shape-only stand-in for metadata-only runs (execute=False):
+    carries the tile grid and byte sizes, never any data.  Lets the
+    scheduling/cache/ledger machinery run at the paper's true scale
+    (N up to 40K, f64) without allocating gigabytes."""
+
+    def __init__(self, matrix_id: str, rows: int, cols: int, tile: int,
+                 itemsize: int = 8):
+        self.grid = TileGrid(matrix_id, rows, cols, tile)
+        self.itemsize = itemsize
+
+    @property
+    def matrix_id(self) -> str:
+        return self.grid.matrix_id
+
+    def nbytes(self, i: int, j: int) -> int:
+        return self.grid.nbytes(i, j, self.itemsize)
+
+    def read_tile(self, i: int, j: int):  # pragma: no cover
+        raise RuntimeError("ShadowMatrix holds no data (execute=False runs)")
+
+    def write_tile(self, i: int, j: int, value) -> None:  # pragma: no cover
+        raise RuntimeError("ShadowMatrix holds no data (execute=False runs)")
+
+
+def degree_of_parallelism(m: int, n: int, tile: int) -> int:
+    """Paper Eq. 2: ceil(M/T) * ceil(N/T) independent output tiles."""
+    return math.ceil(m / tile) * math.ceil(n / tile)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, DataIterator, batch_at_step
+
+__all__ = ["DataConfig", "DataIterator", "batch_at_step"]

@@ -1,0 +1,86 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``matmul`` pads operands to hardware-aligned block multiples (MXU wants
+multiples of 128 in the lane dim, 8 in the sublane dim), clamps block
+shapes to a VMEM budget, invokes the kernel, and slices the result.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+
+VMEM_BUDGET = 12 << 20  # bytes; leave headroom below the 16 MiB/core VMEM
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def default_blocks(m: int, n: int, k: int, itemsize: int):
+    """Pick (block_m, block_n, block_k): MXU-aligned, VMEM-bounded."""
+    bm = min(512, _round_up(m, 8))
+    bn = min(512, _round_up(n, 128))
+    bk = min(512, _round_up(k, 128))
+
+    def vmem(bm, bn, bk):
+        return (bm * bk + bk * bn) * itemsize + bm * bn * 4 + bm * bn * itemsize
+
+    while vmem(bm, bn, bk) > VMEM_BUDGET:
+        # shrink the largest dim first, never below hardware alignment
+        if bk >= bm and bk >= bn and bk > 128:
+            bk //= 2
+        elif bm >= bn and bm > 128:
+            bm //= 2
+        elif bn > 128:
+            bn //= 2
+        else:
+            break
+    return bm, bn, bk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, bias: Optional[jax.Array] = None, *,
+           activation: Optional[str] = None,
+           block_m: Optional[int] = None, block_n: Optional[int] = None,
+           block_k: Optional[int] = None, out_dtype=None,
+           interpret: bool = False) -> jax.Array:
+    """C = activation(A @ B + bias), Pallas-tiled.
+
+    Works for any (M, K) x (K, N); inputs are zero-padded to block
+    multiples and the output sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    itemsize = max(jnp.dtype(a.dtype).itemsize, jnp.dtype(b.dtype).itemsize)
+    dbm, dbn, dbk = default_blocks(m, n, k, itemsize)
+    bm, bn, bk = block_m or dbm, block_n or dbn, block_k or dbk
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+    bias_p = None
+    if bias is not None:
+        bias = bias.reshape(-1)
+        if bias.shape[0] != n:
+            raise ValueError(f"bias length {bias.shape[0]} != N {n}")
+        bias_p = jnp.pad(bias, (0, np_ - n)) if np_ != n else bias
+
+    out = matmul_pallas(a_p, b_p, bias_p, block_m=bm, block_n=bn, block_k=bk,
+                        out_dtype=out_dtype, activation=activation,
+                        interpret=interpret)
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import ACTIVATIONS
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, bias: Optional[jax.Array] = None,
+               activation: Optional[str] = None,
+               out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = ACTIVATIONS[activation](acc)
+    return acc.astype(out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the flash kernel.  q: (B, Sq, H, D); k/v (B, Sk, Hkv, D)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets
+``xla_force_host_platform_device_count`` before any jax init; tests and
+benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the
+    pod axis carries only the cross-pod gradient reduction (DCN), TP
+    stays ICI-local."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: Optional[int] = None,
+                          model_parallel: int = 1):
+    """Elastic helper: build a (data, model) mesh from whatever devices
+    exist (restart with N != save-time devices reshards via the
+    checkpointer)."""
+    n = n_devices or len(jax.devices())
+    if n % model_parallel != 0:
+        raise ValueError(f"{n} devices not divisible by mp={model_parallel}")
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def n_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,201 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+``cost_analysis`` supplies FLOPs and bytes; collective bytes are parsed
+out of the HLO text by summing the *operand* sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (a
+symbol table of instruction result types resolves operand references).
+
+Hardware constants: TPU v5e-class chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# wire-byte weights: ring all-reduce moves 2(n-1)/n of the payload per
+# participant; gather/scatter/a2a move (n-1)/n; a permute moves exactly
+# its operand.  With n=256 the factors round to 2/1/1/1/1.
+WIRE_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def wire_bytes(breakdown: Dict[str, int]) -> float:
+    """Parsed per-kind operand bytes -> modeled wire bytes."""
+    return float(sum(WIRE_WEIGHT.get(k, 1.0) * v
+                     for k, v in breakdown.items()))
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+?)\s+"
+                       r"([\w\-]+)\((.*)\)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand sizes per collective kind across the module."""
+    # symbol table: %name -> result type string
+    symtab: Dict[str, str] = {}
+    pending: List[tuple] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, args = m.groups()
+        symtab[name.lstrip("%")] = rtype
+        base = op.rstrip(".0123456789")
+        for kind in COLLECTIVE_OPS:
+            if base == kind or base.startswith(kind + "-"):
+                pending.append((kind, rtype, args))
+                break
+
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for kind, rtype, args in pending:
+        nbytes = 0
+        # operands may carry inline types, else resolve via symtab
+        for arg in _split_args(args):
+            arg = arg.strip()
+            if not arg:
+                continue
+            inline = _SHAPE_RE.search(arg.split("%")[0])
+            if inline:
+                nbytes += shape_bytes(arg.split("%")[0])
+                continue
+            ref = arg.lstrip("%").split(" ")[0].split(")")[0]
+            t = symtab.get(ref)
+            if t:
+                nbytes += shape_bytes(t)
+        if nbytes == 0:   # fallback: use the result type
+            nbytes = shape_bytes(rtype)
+        out[kind] += nbytes
+    return out
+
+
+def _split_args(args: str) -> List[str]:
+    """Split HLO operand list at top-level commas."""
+    parts, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # coll_bytes carries parsed operand bytes x chips; weight to wire
+        return (wire_bytes(self.coll_breakdown)
+                / sum(self.coll_breakdown.values())
+                * self.coll_bytes if sum(self.coll_breakdown.values())
+                else self.coll_bytes) / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat recompute + dispatch waste)."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the step spent at the roofline if the dominant
+        term were perfectly attained by useful model FLOPs."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE), with the
+    2*N*D forward-only variant for serving shapes."""
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params * shape.global_batch

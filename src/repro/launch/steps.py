@@ -1,0 +1,216 @@
+"""jit-able train / prefill / decode steps + their abstract input specs.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, sharded,
+no allocation) for every model input — the dry-run lowers against these
+directly; real drivers feed arrays of the same shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..models.sharding import MeshRules
+from ..optim import adamw
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+# §Perf toggle: compute the CE loss in sequence chunks (the (B,S,V) f32
+# logits tensor is the single largest buffer of every train step; the
+# chunked form never materializes it — remat recomputes per chunk).
+CHUNKED_CE = True
+CE_CHUNKS = 16
+
+
+def _chunked_ce(hidden, head, labels, rules: MeshRules,
+                mask=None, n_chunks: int = CE_CHUNKS) -> jax.Array:
+    """Mean next-token CE without a full logits tensor.  ``mask``
+    (B, S) of {0,1} optionally excludes positions."""
+    B, S, d = hidden.shape
+    while S % n_chunks != 0 and n_chunks > 1:
+        n_chunks //= 2
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    hc = hidden.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+    mc = mask.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h, l, m = inp
+        logits = jnp.dot(h, head.astype(h.dtype),
+                         preferred_element_type=jnp.float32)
+        logits = rules.constrain(logits, "batch", "seq", "model")
+        lg = jax.nn.log_softmax(logits, axis=-1)
+        ce = -(jnp.take_along_axis(lg, l[..., None], axis=-1)[..., 0]
+               * m).sum()
+        return acc + ce, None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc, mc))
+    return total / jnp.maximum(1.0, mask.sum())
+
+
+# ---------------------------------------------------------------- specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules,
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for the given (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    # single-sequence long decode: batch axis unshardable -> replicate
+    b_ax = "batch" if rules.batch_size_divides(B) else None
+
+    def sds(shp, dtype, *logical):
+        sh = (rules.fitted_sharding(shp, *logical)
+              if rules.mesh is not None else None)
+        if sh is not None:
+            return jax.ShapeDtypeStruct(shp, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32, b_ax, "seq"),
+               "labels": sds((B, S), jnp.int32, b_ax, "seq")}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16,
+                                    b_ax, "seq", None)
+        elif cfg.frontend:
+            # modality frontend stub: precomputed patch/frame embeddings
+            out["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16,
+                                b_ax, "seq", None)
+            del out["tokens"]
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32, b_ax, "seq")}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16,
+                                    b_ax, "seq", None)
+        elif cfg.frontend:
+            out = {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16,
+                                 b_ax, "seq", None)}
+        return out
+    if shape.kind == "decode":
+        return {"token": sds((B,), jnp.int32, b_ax),
+                "pos": sds((B,), jnp.int32, b_ax)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------- train
+def make_train_step(cfg: ModelConfig, rules: MeshRules,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None):
+    model = Model(cfg, rules)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def loss_fn(params, batch):
+        kw = {}
+        if "embeds" in batch:
+            kw["embeds"] = batch["embeds"]
+        else:
+            kw["tokens"] = batch["tokens"]
+        if "enc_embeds" in batch:
+            kw["enc_embeds"] = batch["enc_embeds"]
+        labels = batch["labels"]
+        if CHUNKED_CE:
+            hidden, aux = model.train_logits(params, return_hidden=True,
+                                             **kw)
+            head = model.head_matrix(params)
+            ce = _chunked_ce(hidden, head, labels, rules)
+            loss = ce
+            if "moe_aux_loss" in aux:
+                loss = loss + MOE_AUX_WEIGHT * aux["moe_aux_loss"]
+            if "mtp_hidden" in aux:
+                # predict t+2: shift labels, mask the final position
+                l2 = jnp.concatenate(
+                    [labels[:, 1:], jnp.zeros_like(labels[:, :1])], axis=1)
+                m2 = jnp.concatenate(
+                    [jnp.ones_like(labels[:, 1:], jnp.float32),
+                     jnp.zeros_like(labels[:, :1], jnp.float32)], axis=1)
+                mtp_ce = _chunked_ce(aux["mtp_hidden"], head, l2, rules,
+                                     mask=m2)
+                loss = loss + MTP_WEIGHT * mtp_ce
+            return loss, {"ce": ce}
+        logits, aux = model.train_logits(params, **kw)
+        lg = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ce = -jnp.take_along_axis(lg, labels[..., None], axis=-1).mean()
+        loss = ce
+        if "moe_aux_loss" in aux:
+            loss = loss + MOE_AUX_WEIGHT * aux["moe_aux_loss"]
+        if "mtp_logits" in aux:
+            # MTP: predict t+2 with the extra block's logits
+            mlg = jax.nn.log_softmax(
+                aux["mtp_logits"][:, :-1].astype(jnp.float32), axis=-1)
+            mtp_ce = -jnp.take_along_axis(
+                mlg, labels[:, 1:][..., None], axis=-1).mean()
+            loss = loss + MTP_WEIGHT * mtp_ce
+        return loss, {"ce": ce}
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step, model
+
+
+# §Perf toggle: serve with model-only-sharded params when they fit —
+# inference has no optimizer state, so FSDP's per-layer weight
+# all-gathers are pure overhead there.
+SERVING_NO_FSDP = True
+SERVING_FIT_GB = 8.0
+
+
+def serving_rules(cfg: ModelConfig, rules: MeshRules) -> MeshRules:
+    import dataclasses as _dc
+    if not SERVING_NO_FSDP or rules.mesh is None:
+        return rules
+    model_n = max(1, rules.axis_size(rules.model_axis))
+    params_gb = cfg.param_count() * 2 / 2 ** 30  # bf16
+    if params_gb / model_n <= SERVING_FIT_GB:
+        return _dc.replace(rules, fsdp_axis=None)
+    return rules
+
+
+# ----------------------------------------------------------------- serve
+def make_prefill_step(cfg: ModelConfig, rules: MeshRules):
+    model = Model(cfg, rules)
+
+    def prefill_step(params, batch):
+        kw = {k: v for k, v in batch.items()
+              if k in ("tokens", "embeds", "enc_embeds")}
+        return model.prefill(params, **kw)
+
+    return prefill_step, model
+
+
+def make_decode_step(cfg: ModelConfig, rules: MeshRules):
+    """serve_step: ONE new token against a kv/state cache (the
+    ``decode_*`` / ``long_*`` dry-run shapes lower THIS, not train)."""
+    model = Model(cfg, rules)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+
+    return decode_step, model
+
+
+# -------------------------------------------------------------- abstract
+def abstract_train_state(cfg: ModelConfig, rules: MeshRules
+                         ) -> Tuple[Any, Any]:
+    model = Model(cfg, rules)
+    params = model.abstract()
+    opt_state = adamw.abstract_state(params)
+    return params, opt_state
+
+
+def abstract_serve_state(cfg: ModelConfig, rules: MeshRules,
+                         shape: ShapeConfig) -> Tuple[Any, Any]:
+    model = Model(cfg, rules)
+    params = model.abstract()
+    cache = model.abstract_cache(shape.global_batch, shape.seq_len,
+                                 enc_len=min(shape.seq_len, 4096))
+    return params, cache

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures over 5 families."""
+from .sharding import MeshRules, rules_for_mesh, NO_MESH
+from .transformer import Model, build_params
+
+__all__ = ["Model", "build_params", "MeshRules", "rules_for_mesh", "NO_MESH"]

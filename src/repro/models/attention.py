@@ -1,0 +1,280 @@
+"""Attention: GQA (with qk-norm), MLA (DeepSeek), cross-attention, KV
+caches for serving, and query-chunked computation for long prefills.
+
+Softmax/score math in f32; weights/activations in the config dtype.
+The decode path for MLA uses the *absorbed* formulation (cache is the
+compressed c_kv + shared RoPE key): at 32k context x128 batch the
+expanded cache would not fit the pod, and absorption is the published
+DeepSeek-V3 serving scheme — i.e. faithful, not an optimization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Maker, apply_rope, rms_norm, rope_angles, row_parallel_matmul
+from .sharding import MeshRules
+
+DEFAULT_Q_CHUNK = 1024
+
+# Attention backend for train/prefill self-attention:
+#   "xla"    — chunked einsum SDPA (works everywhere; CPU dry-run path)
+#   "pallas" — the flash-attention kernel (TPU target; interpret=True on
+#              CPU).  Decode and cross-attention always use the XLA path
+#              (tiny workloads / cached K,V).
+ATTENTION_BACKEND = "xla"
+_FLASH_INTERPRET = True  # CPU container; flip False on real TPU
+
+
+# ---------------------------------------------------------------- params
+def make_attn_params(mk: Maker, cfg) -> dict:
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    p = {
+        "wq": mk.param((d, H * hd), ("embed", "model")),
+        "wk": mk.param((d, Hkv * hd), ("embed", "model")),
+        "wv": mk.param((d, Hkv * hd), ("embed", "model")),
+        "wo": mk.param((H * hd, d), ("model", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = mk.ones((hd,), (None,))
+        p["k_norm"] = mk.ones((hd,), (None,))
+    return p
+
+
+def make_mla_params(mk: Maker, cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq_a": mk.param((d, cfg.q_lora_rank), ("embed", None)),
+        "q_a_norm": mk.ones((cfg.q_lora_rank,), (None,)),
+        "wq_b": mk.param((cfg.q_lora_rank, H * qh), (None, "model")),
+        "wkv_a": mk.param((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                          ("embed", None)),
+        "kv_a_norm": mk.ones((cfg.kv_lora_rank,), (None,)),
+        "wkv_b": mk.param(
+            (cfg.kv_lora_rank,
+             H * (cfg.qk_nope_head_dim + cfg.v_head_dim)), (None, "model")),
+        "wo": mk.param((H * cfg.v_head_dim, d), ("model", "embed")),
+    }
+
+
+# ------------------------------------------------------------- core math
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          qpos: jax.Array, kpos: jax.Array, *, causal: bool,
+          scale: float, kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped scaled-dot-product attention.
+    q: (B, Sq, H, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv).
+    qpos: (Sq,) or (B, Sq); kpos: (Skv,).  kv_valid: (B,) count of valid
+    cache entries (decode).  Returns (B, Sq, H, Dv)."""
+    B, Sq, H, Dk = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, Sq, Hkv, G, Dk).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+
+    if qpos.ndim == 1:
+        qpos = qpos[None, :]
+    mask = jnp.ones((B, Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, None, :] <= qpos[:, :, None]
+    if kv_valid is not None:
+        mask &= kpos[None, None, :] < kv_valid[:, None, None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(v.dtype)
+
+
+def _sdpa_chunked(q, k, v, qpos, kpos, *, causal, scale,
+                  kv_valid=None, chunk=DEFAULT_Q_CHUNK):
+    """Query-chunked SDPA: O(chunk * Skv) live scores instead of
+    O(Sq * Skv) — the long-prefill memory saver."""
+    B, Sq = q.shape[0], q.shape[1]
+    if Sq <= chunk or Sq % chunk != 0:
+        return _sdpa(q, k, v, qpos=qpos, kpos=kpos, causal=causal,
+                     scale=scale, kv_valid=kv_valid)
+    n = Sq // chunk
+    qc = q.reshape(B, n, chunk, *q.shape[2:]).swapaxes(0, 1)
+    pc = qpos.reshape(n, chunk) if qpos.ndim == 1 else \
+        qpos.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def one(args):
+        qi, pi = args
+        return _sdpa(qi, k, v, qpos=pi, kpos=kpos, causal=causal,
+                     scale=scale, kv_valid=kv_valid)
+
+    out = jax.lax.map(one, (qc, pc))
+    return out.swapaxes(0, 1).reshape(B, Sq, q.shape[2], v.shape[-1])
+
+
+# ------------------------------------------------------------ GQA module
+def gqa_attention(cfg, p: dict, x: jax.Array, positions: jax.Array,
+                  rules: MeshRules, *,
+                  cache: Optional[dict] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  make_cache: bool = False,
+                  causal: bool = True,
+                  kv_input: Optional[jax.Array] = None,
+                  q_chunk: int = DEFAULT_Q_CHUNK,
+                  ) -> Tuple[jax.Array, Optional[dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    Modes:
+      train:    cache=None, make_cache=False
+      prefill:  make_cache=True -> returns cache sized to S
+      decode:   cache given, cache_index = current position (B,)
+      cross:    kv_input = encoder states (cache stores projected K/V)
+    """
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    kv_src = kv_input if kv_input is not None else x
+    Skv_in = kv_src.shape[1]
+
+    if cache is not None and kv_input is not None:
+        # cross-attention decode: K/V were projected once at prefill
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = (kv_src @ p["wk"]).reshape(B, Skv_in, Hkv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, Skv_in, Hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if kv_input is None:  # RoPE only for self-attention
+            kv_pos = positions if cache is None else positions
+            cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        new_cache = None
+        if cache is not None:
+            # decode: write this step's K/V at cache_index
+            k_cache, v_cache = cache["k"], cache["v"]
+            idx = cache_index  # (B,) int32 current length
+            k_cache = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(
+                    c, u, (i, 0, 0)))(k_cache, k, idx)
+            v_cache = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice(
+                    c, u, (i, 0, 0)))(v_cache, v, idx)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k, v = k_cache, v_cache
+        elif make_cache:
+            new_cache = {"k": k, "v": v}
+
+    if cache is None:
+        # training/prefill layout; decode keeps the cache's own sharding
+        # (which may be context-parallel for long single-sequence decode)
+        k = rules.constrain(k, "batch", None, "kv", None)
+        v = rules.constrain(v, "batch", None, "kv", None)
+        q = rules.constrain(q, "batch", None, "model", None)
+
+    scale = 1.0 / np.sqrt(hd)
+    Skv = k.shape[1]
+    kpos = jnp.arange(Skv, dtype=jnp.int32)
+    kv_valid = None
+    if cache is not None and kv_input is None:
+        kv_valid = cache_index + 1
+        qpos = positions
+        causal_eff = False  # masking handled by kv_valid
+    else:
+        qpos = positions
+        causal_eff = causal and kv_input is None
+
+    if (ATTENTION_BACKEND == "pallas" and cache is None
+            and kv_input is None and kv_valid is None):
+        from ..kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=causal_eff, scale=scale,
+                              block_q=min(128, max(8, S)),
+                              block_k=min(128, max(8, k.shape[1])),
+                              interpret=_FLASH_INTERPRET)
+    else:
+        out = _sdpa_chunked(q, k, v, qpos=qpos, kpos=kpos,
+                            causal=causal_eff, scale=scale,
+                            kv_valid=kv_valid, chunk=q_chunk)
+    y = row_parallel_matmul(out.reshape(B, S, H * hd), p["wo"], rules)
+    return y, new_cache
+
+
+# ------------------------------------------------------------ MLA module
+def _mla_qkv(cfg, p, x):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, nope + rope)
+    ckv_full = x @ p["wkv_a"]
+    ckv = rms_norm(ckv_full[..., :cfg.kv_lora_rank], p["kv_a_norm"],
+                   cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]
+    return q, ckv, k_rope
+
+
+def mla_attention(cfg, p: dict, x: jax.Array, positions: jax.Array,
+                  rules: MeshRules, *,
+                  cache: Optional[dict] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  make_cache: bool = False,
+                  q_chunk: int = DEFAULT_Q_CHUNK,
+                  ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    scale = 1.0 / np.sqrt(nope + rope_d)
+
+    q, ckv, k_rope = _mla_qkv(cfg, p, x)
+    cos, sin = rope_angles(positions, rope_d, cfg.rope_theta)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is None:
+        # train / prefill: expand K,V (no cache pressure), full attention
+        kv = (ckv @ p["wkv_b"]).reshape(B, S, H, nope + vd)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, rope_d))], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa_chunked(qfull, k, v, qpos=positions,
+                            kpos=jnp.arange(S, dtype=jnp.int32),
+                            causal=True, scale=scale, chunk=q_chunk)
+        y = row_parallel_matmul(out.reshape(B, S, H * vd), p["wo"], rules)
+        new_cache = {"ckv": ckv, "k_rope": k_rope} if make_cache else None
+        return y, new_cache
+
+    # ---------------- absorbed decode: cache is compressed (c_kv, k_rope)
+    idx = cache_index  # (B,)
+    ckv_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["ckv"], ckv, idx)
+    krope_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0)))(cache["k_rope"], k_rope, idx)
+    new_cache = {"ckv": ckv_c, "k_rope": krope_c}
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, nope + vd)
+    w_uk = wkv_b[..., :nope]           # (r, H, nope)
+    w_uv = wkv_b[..., nope:]           # (r, H, vd)
+    # absorb W_uk into q: q_c (B, S=1, H, r)
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    Skv = ckv_c.shape[1]
+    kpos = jnp.arange(Skv, dtype=jnp.int32)
+    valid = (idx + 1)[:, None, None, None]
+    scores = (jnp.einsum("bshr,bkr->bhsk", q_c,
+                         ckv_c.astype(jnp.float32))
+              + jnp.einsum("bshr,bkr->bhsk", q_rope.astype(jnp.float32),
+                           krope_c.astype(jnp.float32))) * scale
+    mask = kpos[None, None, None, :] < valid
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_c = jnp.einsum("bhsk,bkr->bshr", w, ckv_c.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", o_c, w_uv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, S, H * vd)
+    y = row_parallel_matmul(out, p["wo"], rules)
+    return y, new_cache

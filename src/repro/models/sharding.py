@@ -1,0 +1,114 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Parameters and activations are annotated with *logical* axes; the rules
+map them to mesh axes for the active topology:
+
+  single-pod  (16, 16)   ("data", "model")
+  multi-pod   (2, 16, 16)("pod", "data", "model")
+
+Weights are fully sharded ("fsdp" on the non-TP dim, tensor-parallel on
+"model"); batch shards over ("pod","data"); per-layer all-gathers are
+GSPMD's job.  On a CPU/no-mesh context every helper degrades to a
+no-op so smoke tests run unmodified.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis vocabulary
+BATCH = "batch"       # global batch            -> ("pod","data") / ("data",)
+SEQ = "seq"           # sequence (usually unsharded; CP uses it)
+EMBED = "embed"       # d_model                 -> fsdp ("data")
+MODEL = "model"       # TP dim (heads/ff/vocab) -> "model"
+EXPERT = "expert"     # MoE experts             -> "model"
+KV = "kv"             # kv heads                -> "model"
+NONE = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axis: Optional[str] = "data"
+    model_axis: Optional[str] = "model"
+    seq_axis: Optional[str] = None   # context parallelism when set
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        if isinstance(name, (tuple, list)):
+            n = 1
+            for a in name:
+                n *= self.mesh.shape.get(a, 1)
+            return n
+        return self.mesh.shape.get(name, 1)
+
+    def batch_size_divides(self, b: int) -> bool:
+        return b % max(1, self.axis_size(self.batch_axes)) == 0
+
+    def physical(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == BATCH:
+            return self.batch_axes if len(self.batch_axes) > 1 \
+                else self.batch_axes[0]
+        if logical == SEQ:
+            return self.seq_axis
+        if logical == EMBED:
+            return self.fsdp_axis
+        if logical in (MODEL, EXPERT, KV):
+            return self.model_axis
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical) -> P:
+        return P(*(self.physical(l) for l in logical))
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def fitted_sharding(self, shape, *logical) -> Optional[NamedSharding]:
+        """Like ``sharding`` but drops any axis that does not divide the
+        corresponding dim (odd vocab sizes, few kv heads, batch=1...).
+        Use for every concrete array/SDS placement."""
+        if self.mesh is None:
+            return None
+        assert len(shape) == len(logical), (shape, logical)
+        fitted = []
+        for dim, log in zip(shape, logical):
+            ax = self.physical(log)
+            n = self.axis_size(ax)
+            fitted.append(ax if (ax is not None and n > 1
+                                 and dim % n == 0) else None)
+        return NamedSharding(self.mesh, P(*fitted))
+
+    def constrain(self, x: jax.Array, *logical) -> jax.Array:
+        """with_sharding_constraint if a mesh is active, else identity.
+        Divisibility-fitted: axes that don't divide the dim are dropped
+        (avoids involuntary full rematerialization in SPMD)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self.fitted_sharding(x.shape, *logical))
+
+
+def rules_for_mesh(mesh: Optional[Mesh], *,
+                   seq_axis: Optional[str] = None) -> MeshRules:
+    if mesh is None:
+        return MeshRules(mesh=None, batch_axes=(), fsdp_axis=None,
+                         model_axis=None, seq_axis=None)
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data")) or (names[0],)
+    fsdp = "data" if "data" in names else None
+    model = "model" if "model" in names else None
+    return MeshRules(mesh=mesh, batch_axes=batch, fsdp_axis=fsdp,
+                     model_axis=model, seq_axis=seq_axis)
+
+
+NO_MESH = MeshRules(mesh=None, batch_axes=(), fsdp_axis=None,
+                    model_axis=None)

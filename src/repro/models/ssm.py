@@ -1,0 +1,173 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked, plus O(1) decode.
+
+The SSD recurrence per head (state N = ssm_state, head dim P):
+    h_t = a_t * h_{t-1} + (dt_t * x_t) outer B_t        a_t = exp(-exp(A_log) dt_t)
+    y_t = C_t . h_t + D * x_t
+
+Chunked algorithm (the duality): within a chunk the output is an
+attention-like quadratic form with decay mask; across chunks only the
+(H, P, N) boundary states are carried by a short scan — this is what
+makes 500k-token contexts O(S) compute / O(1) cache, and why the
+``long_500k`` shape runs for the SSM/hybrid archs only.
+
+Tile-engine connection (DESIGN.md §Arch-applicability): the intra-chunk
+quadratic forms are exactly BLASX-shaped tile GEMMs; the inter-chunk
+recurrence is a scan outside the tile algebra.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Maker, rms_norm
+from .sharding import MeshRules
+
+
+def make_mamba_params(mk: Maker, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    return {
+        # order: [z (di), x (di), B (ds), C (ds), dt (H)]
+        "in_proj": mk.param((d, 2 * di + 2 * ds + H), ("embed", "model")),
+        "conv_w": mk.param((cfg.ssm_conv, conv_dim), (None, "model"),
+                           scale=0.5),
+        "conv_b": mk.param((conv_dim,), ("model",), zeros=True),
+        "A_log": mk.ones((H,), (None,), dtype=jnp.float32),
+        "D": mk.ones((H,), (None,), dtype=jnp.float32),
+        "dt_bias": mk.param((H,), (None,), zeros=True, dtype=jnp.float32),
+        "norm": mk.ones((di,), ("model",)),
+        "out_proj": mk.param((di, d), ("model", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+    state: (B, K-1, C) carry for decode.  Returns (y, new_state)."""
+    B, S, Cdim = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, Cdim), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)          # (B, K-1+S, C)
+    y = sum(xx[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    y = y + b[None, None, :]
+    new_state = xx[:, -(K - 1):, :] if K > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, a_log, Bmat, Cmat, chunk: int):
+    """Chunked SSD scan.
+    xh: (B, S, H, P); dt: (B, S, H); Bmat/Cmat: (B, S, N).
+    Returns y: (B, S, H, P) and final state (B, H, P, N)."""
+    Bsz, S, H, P = xh.shape
+    N = Bmat.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    f32 = jnp.float32
+    lg_a = (-jnp.exp(a_log.astype(f32))[None, None, :]
+            * dt.astype(f32))                         # (B, S, H) log decay
+    xdt = xh.astype(f32) * dt.astype(f32)[..., None]  # (B, S, H, P)
+
+    def r(t, shape):  # chunked reshape helper
+        return t.reshape(shape)
+
+    lg = r(lg_a, (Bsz, nc, chunk, H))
+    xc = r(xdt, (Bsz, nc, chunk, H, P))
+    Bc = r(Bmat.astype(f32), (Bsz, nc, chunk, N))
+    Cc = r(Cmat.astype(f32), (Bsz, nc, chunk, N))
+
+    csum = jnp.cumsum(lg, axis=2)                     # (B, nc, L, H)
+    # ----- intra-chunk (quadratic "attention" with decay mask)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)    # (B, nc, L, L)
+    li = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # (B,nc,L,S,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", scores, decay, xc)
+
+    # ----- chunk boundary states
+    tail = csum[:, :, -1:, :] - csum                  # exp(l_end - l_s)
+    st = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                    jnp.exp(tail), Bc, xc)            # (B, nc, H, P, N)
+    a_chunk = jnp.exp(csum[:, :, -1, :])              # (B, nc, H)
+
+    # ----- inter-chunk scan (tiny: nc steps)
+    def step(h, inp):
+        a_k, s_k = inp                                # (B,H), (B,H,P,N)
+        h_new = h * a_k[..., None, None] + s_k
+        return h_new, h                               # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), f32)
+    h_last, h_before = jax.lax.scan(
+        step, h0, (a_chunk.swapaxes(0, 1), st.swapaxes(0, 1)))
+    h_before = h_before.swapaxes(0, 1)                # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcsn,bcsh,bchpn->bcshp",
+                         Cc, jnp.exp(csum), h_before)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), h_last
+
+
+def mamba_block(cfg, p: dict, x: jax.Array, rules: MeshRules, *,
+                state: Optional[dict] = None, make_state: bool = False,
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba2 mixer.  x: (B, S, d).
+    state (decode): {"conv": (B, K-1, conv_dim), "ssm": (B, H, P, N)}."""
+    B, S, d = x.shape
+    di, ds, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt_raw = zxbcdt[..., -H:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bmat = xbc[..., di:di + ds]
+    Cmat = xbc[..., di + ds:]
+
+    if state is not None:
+        # -------- decode: O(1) recurrent update (S == 1)
+        h = state["ssm"]                              # (B, H, P, N) f32
+        a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))
+                    * dt[:, 0, :])                    # (B, H)
+        xdt = xs[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+        upd = jnp.einsum("bhp,bn->bhpn", xdt, Bmat[:, 0].astype(jnp.float32))
+        h = h * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), h)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * \
+            xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_state = {"conv": new_conv, "ssm": h}
+    else:
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # zero-pad to a chunk multiple; padded steps use dt=0 so they
+            # neither decay nor update the state (a=1, dB=0)
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xs_p, dt_p, B_p, C_p = xs, dt, Bmat, Cmat
+        y, h_last = _ssd_chunked(xs_p, dt_p, p["A_log"], B_p, C_p, chunk)
+        y = y[:, :S]
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+            xs.astype(jnp.float32)
+        y = y.reshape(B, S, di).astype(x.dtype)
+        new_state = ({"conv": new_conv, "ssm": h_last}
+                     if make_state else None)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, new_state

@@ -1,0 +1,550 @@
+"""Model assembly for the five assigned families.
+
+Layers are *stacked* (leading L dim) and driven by ``lax.scan`` — one
+compiled block body per homogeneous group regardless of depth (61-layer
+DeepSeek compiles as fast as 2-layer smoke).  Heterogeneous stacks
+(DeepSeek's 3 dense + 58 MoE layers; Zamba2's shared attention block
+every 6 Mamba layers) are expressed as segments of scans.
+
+``Model`` exposes:
+  init(key)            real parameters (smoke tests / small training)
+  abstract()           ShapeDtypeStruct pytree with shardings (dry-run)
+  train_logits(...)    full-sequence logits (+ aux losses)
+  prefill(...)         logits of last position + serving cache
+  decode(...)          one-token step with cache
+  abstract_cache(...)  ShapeDtypeStruct cache for serve-step dry-runs
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import gqa_attention, make_attn_params, make_mla_params, \
+    mla_attention
+from .layers import Maker, apply_norm, make_mlp_params, mlp
+from .moe import make_moe_params, moe_block
+from .sharding import MeshRules, NO_MESH
+from .ssm import make_mamba_params, mamba_block
+
+
+# Layer-scan unrolling.  False (default): compact while-loop programs —
+# fastest compiles, but XLA's cost_analysis counts loop bodies ONCE.
+# The dry-run sets this True so FLOPs/bytes/collective counts in the
+# roofline reflect every layer.
+SCAN_UNROLL = False
+
+
+class _Stacked:
+    """Maker proxy that prepends the layer dimension to every param."""
+
+    def __init__(self, base: Maker, n: int):
+        self._base = base
+        self._n = n
+
+    def param(self, shape, logical, **kw):
+        return self._base.param((self._n,) + tuple(shape),
+                                (None,) + tuple(logical), **kw)
+
+    def ones(self, shape, logical, **kw):
+        return self._base.ones((self._n,) + tuple(shape),
+                               (None,) + tuple(logical), **kw)
+
+
+def _dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ==========================================================================
+# parameter construction
+# ==========================================================================
+def _attn_block_params(mk, cfg, ff: Optional[int] = None,
+                       moe: bool = False, cross: bool = False) -> dict:
+    p: Dict[str, Any] = {}
+    if not cfg.nonparametric_ln:
+        p["ln1"] = mk.ones((cfg.d_model,), (None,))
+        p["ln2"] = mk.ones((cfg.d_model,), (None,))
+    p["attn"] = (make_mla_params(mk, cfg) if cfg.use_mla
+                 else make_attn_params(mk, cfg))
+    if cross:
+        if not cfg.nonparametric_ln:
+            p["ln_cross"] = mk.ones((cfg.d_model,), (None,))
+        p["cross"] = make_attn_params(mk, cfg)
+    if moe:
+        p["moe"] = make_moe_params(mk, cfg)
+    else:
+        p["mlp"] = make_mlp_params(mk, cfg.d_model, ff or cfg.d_ff)
+    return p
+
+
+def _mamba_block_params(mk, cfg) -> dict:
+    return {
+        "ln": mk.ones((cfg.d_model,), (None,)),
+        "mixer": make_mamba_params(mk, cfg),
+    }
+
+
+def build_params(cfg, mode: str, rules: MeshRules,
+                 key: Optional[jax.Array] = None) -> dict:
+    mk = Maker(mode, rules, _dtype_of(cfg), key)
+    p: Dict[str, Any] = {
+        "embed": mk.param((cfg.vocab_size, cfg.d_model), ("model", "embed"),
+                          scale=0.02),
+        "final_norm": mk.ones((cfg.d_model,), (None,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = mk.param((cfg.d_model, cfg.vocab_size),
+                                ("embed", "model"))
+
+    fam = cfg.family
+    if fam == "dense":
+        p["blocks"] = _attn_block_params(_Stacked(mk, cfg.n_layers), cfg)
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        if nd:
+            p["dense_blocks"] = _attn_block_params(_Stacked(mk, nd), cfg)
+        p["moe_blocks"] = _attn_block_params(
+            _Stacked(mk, cfg.n_layers - nd), cfg, moe=True)
+        if cfg.mtp:
+            p["mtp_block"] = _attn_block_params(mk, cfg)
+            p["mtp_norm"] = mk.ones((cfg.d_model,), (None,))
+    elif fam == "ssm":
+        p["blocks"] = _mamba_block_params(_Stacked(mk, cfg.n_layers), cfg)
+    elif fam == "hybrid":
+        p["blocks"] = _mamba_block_params(_Stacked(mk, cfg.n_layers), cfg)
+        p["shared_attn"] = _attn_block_params(mk, cfg)  # ONE shared block
+    elif fam == "encdec":
+        p["enc_blocks"] = _attn_block_params(
+            _Stacked(mk, cfg.n_encoder_layers), cfg)
+        p["dec_blocks"] = _attn_block_params(
+            _Stacked(mk, cfg.n_layers), cfg, cross=True)
+        p["enc_norm"] = mk.ones((cfg.d_model,), (None,))
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ==========================================================================
+# block applications
+# ==========================================================================
+def _attn_block(cfg, rules, p, x, positions, *, cache=None, cache_index=None,
+                make_cache=False, causal=True, enc_out=None, q_chunk=1024):
+    h = apply_norm(cfg, x, p.get("ln1"))
+    if cfg.use_mla:
+        a, new_cache = mla_attention(cfg, p["attn"], h, positions, rules,
+                                     cache=cache, cache_index=cache_index,
+                                     make_cache=make_cache, q_chunk=q_chunk)
+    else:
+        a, new_cache = gqa_attention(cfg, p["attn"], h, positions, rules,
+                                     cache=cache, cache_index=cache_index,
+                                     make_cache=make_cache, causal=causal,
+                                     q_chunk=q_chunk)
+    x = x + a
+    aux = {}
+    if "cross" in p:
+        h = apply_norm(cfg, x, p.get("ln_cross"))
+        if enc_out is not None:  # train / prefill: project encoder K,V
+            c, cross_cache = gqa_attention(
+                cfg, p["cross"], h, positions, rules,
+                make_cache=make_cache, causal=False, kv_input=enc_out)
+            if make_cache:
+                new_cache = dict(new_cache or {})
+                new_cache["cross_k"] = cross_cache["k"]
+                new_cache["cross_v"] = cross_cache["v"]
+        else:  # decode: K,V were projected once at prefill
+            cc = {"k": cache["cross_k"], "v": cache["cross_v"]}
+            c, _ = gqa_attention(
+                cfg, p["cross"], h, positions, rules, cache=cc,
+                causal=False, kv_input=h)  # kv_input= sentinel: use cache
+            new_cache = dict(new_cache or {})
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        x = x + c
+    h = apply_norm(cfg, x, p.get("ln2"))
+    if "moe" in p:
+        m, aux = moe_block(cfg, p["moe"], h, rules)
+    else:
+        m = mlp(cfg, p["mlp"], h, rules)
+    x = x + m
+    x = rules.constrain(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _mamba_block_apply(cfg, rules, p, x, *, state=None, make_state=False):
+    h = apply_norm(cfg, x, p.get("ln"))
+    y, new_state = mamba_block(cfg, p["mixer"], h, rules, state=state,
+                               make_state=make_state)
+    x = x + y
+    x = rules.constrain(x, "batch", "seq", None)
+    return x, new_state
+
+
+def _scan_blocks(cfg, rules, stacked, x, positions, *, kind,
+                 caches=None, cache_index=None, make_cache=False,
+                 causal=True, enc_out=None, remat=False, q_chunk=1024):
+    """Scan a homogeneous stacked group over the layer dim.  Returns
+    (x, new_caches_stacked, aux_summed)."""
+
+    def body(carry, layer_in):
+        xc = carry
+        lp = layer_in["p"]
+        lcache = layer_in.get("cache")
+        if kind == "attn":
+            xc, ncache, aux = _attn_block(
+                cfg, rules, lp, xc, positions, cache=lcache,
+                cache_index=cache_index, make_cache=make_cache,
+                causal=causal, enc_out=enc_out, q_chunk=q_chunk)
+            aux_vec = jnp.stack(
+                [aux.get("moe_aux_loss", jnp.float32(0.0)),
+                 aux.get("moe_drop_frac", jnp.float32(0.0))])
+            return xc, {"cache": ncache, "aux": aux_vec}
+        else:
+            xc, nstate = _mamba_block_apply(cfg, rules, lp, xc, state=lcache,
+                                            make_state=make_cache)
+            return xc, {"cache": nstate}
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs: Dict[str, Any] = {"p": stacked}
+    if caches is not None:
+        xs["cache"] = caches
+    x, ys = jax.lax.scan(body, x, xs, unroll=SCAN_UNROLL)
+    new_caches = ys.get("cache")
+    aux = {}
+    if kind == "attn" and "aux" in ys:
+        s = jnp.sum(ys["aux"], axis=0)
+        aux = {"moe_aux_loss": s[0], "moe_drop_frac": s[1]}
+    return x, new_caches, aux
+
+
+# ==========================================================================
+# the Model facade
+# ==========================================================================
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    rules: MeshRules = NO_MESH
+
+    # ------------------------------------------------------------ params
+    def init(self, key) -> dict:
+        return build_params(self.cfg, "init", self.rules, key)
+
+    def abstract(self) -> dict:
+        return build_params(self.cfg, "abstract", self.rules)
+
+    # ------------------------------------------------------------ embed
+    def _embed(self, params, tokens=None, embeds=None):
+        if embeds is not None:
+            return embeds.astype(_dtype_of(self.cfg))
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def head_matrix(self, params) -> jax.Array:
+        """(d_model, vocab) unembedding matrix."""
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def _logits(self, params, x):
+        x = apply_norm(self.cfg, x, params["final_norm"])
+        head = self.head_matrix(params)
+        logits = jnp.dot(x, head.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+        return self.rules.constrain(logits, "batch", "seq", "model")
+
+    def _encode(self, params, enc_embeds, remat):
+        cfg, rules = self.cfg, self.rules
+        pos = jnp.arange(enc_embeds.shape[1], dtype=jnp.int32)
+        x = enc_embeds.astype(_dtype_of(cfg))
+        x, _, _ = _scan_blocks(cfg, rules, params["enc_blocks"], x, pos,
+                               kind="attn", causal=False, remat=remat)
+        return apply_norm(cfg, x, params["enc_norm"])
+
+    # ----------------------------------------------------------- forward
+    def train_logits(self, params, *, tokens=None, embeds=None,
+                     enc_embeds=None, return_hidden: bool = False
+                     ) -> Tuple[jax.Array, dict]:
+        """Full-sequence logits.  Returns (logits, aux); with
+        ``return_hidden`` returns the final-norm hidden states instead
+        (aux carries ``mtp_hidden``) so the caller can compute a
+        CHUNKED cross-entropy without materializing (B, S, V) logits."""
+        cfg, rules = self.cfg, self.rules
+        x = self._embed(params, tokens, embeds)
+        x = rules.constrain(x, "batch", "seq", None)
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        remat = cfg.remat
+        aux: Dict[str, jax.Array] = {}
+
+        if cfg.family == "dense":
+            x, _, _ = _scan_blocks(cfg, rules, params["blocks"], x, pos,
+                                   kind="attn", remat=remat)
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                x, _, _ = _scan_blocks(cfg, rules, params["dense_blocks"], x,
+                                       pos, kind="attn", remat=remat)
+            x, _, aux = _scan_blocks(cfg, rules, params["moe_blocks"], x, pos,
+                                     kind="attn", remat=remat)
+            if cfg.mtp:
+                xm, _, _ = _attn_block(cfg, rules, params["mtp_block"],
+                                       apply_norm(cfg, x, params["mtp_norm"]),
+                                       pos)
+                aux = dict(aux)
+                aux["mtp_hidden"] = xm
+        elif cfg.family == "ssm":
+            x, _, _ = _scan_blocks(cfg, rules, params["blocks"], x, pos,
+                                   kind="mamba", remat=remat)
+        elif cfg.family == "hybrid":
+            x = self._hybrid_stack(params, x, pos, remat=remat)
+        elif cfg.family == "encdec":
+            enc = self._encode(params, enc_embeds, remat)
+            x, _, _ = _scan_blocks(cfg, rules, params["dec_blocks"], x, pos,
+                                   kind="attn", enc_out=enc, remat=remat)
+        if return_hidden:
+            xh = apply_norm(cfg, x, params["final_norm"])
+            if cfg.family == "moe" and cfg.mtp and "mtp_hidden" in aux:
+                aux = dict(aux)
+                aux["mtp_hidden"] = apply_norm(cfg, aux["mtp_hidden"],
+                                               params["final_norm"])
+            return xh, aux
+        logits = self._logits(params, x)
+        if cfg.family == "moe" and cfg.mtp and "mtp_hidden" in aux:
+            aux["mtp_logits"] = self._logits(params, aux.pop("mtp_hidden"))
+        return logits, aux
+
+    def _hybrid_stack(self, params, x, pos, *, remat, caches=None,
+                      cache_index=None, make_cache=False):
+        """Zamba2: segments of ``attn_every`` Mamba layers, each followed
+        by THE shared attention block (weights reused; caches distinct)."""
+        cfg, rules = self.cfg, self.rules
+        period = cfg.attn_every
+        n_seg = cfg.n_layers // period
+        new_mamba, new_attn = [], []
+        for s in range(n_seg):
+            seg = jax.tree.map(lambda a: a[s * period:(s + 1) * period],
+                               params["blocks"])
+            seg_cache = None
+            if caches is not None:
+                seg_cache = jax.tree.map(
+                    lambda a: a[s * period:(s + 1) * period],
+                    caches["mamba"])
+            x, nm, _ = _scan_blocks(cfg, rules, seg, x, pos, kind="mamba",
+                                    caches=seg_cache, make_cache=make_cache,
+                                    cache_index=cache_index, remat=remat)
+            a_cache = (jax.tree.map(lambda a: a[s], caches["attn"])
+                       if caches is not None else None)
+            x, na, _ = _attn_block(cfg, rules, params["shared_attn"], x, pos,
+                                   cache=a_cache, cache_index=cache_index,
+                                   make_cache=make_cache)
+            if nm is not None:
+                new_mamba.append(nm)
+            if na is not None:
+                new_attn.append(na)
+        rem = cfg.n_layers - n_seg * period
+        if rem:
+            seg = jax.tree.map(lambda a: a[-rem:], params["blocks"])
+            seg_cache = (jax.tree.map(lambda a: a[-rem:], caches["mamba"])
+                         if caches is not None else None)
+            x, nm, _ = _scan_blocks(cfg, rules, seg, x, pos, kind="mamba",
+                                    caches=seg_cache, make_cache=make_cache,
+                                    cache_index=cache_index, remat=remat)
+            if nm is not None:
+                new_mamba.append(nm)
+        if make_cache or caches is not None:
+            cat = lambda parts: jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, 0), *parts)
+            stk = lambda parts: jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *parts)
+            self._last_hybrid_cache = {
+                "mamba": cat(new_mamba), "attn": stk(new_attn)}
+        return x
+
+    # ----------------------------------------------------------- serving
+    @staticmethod
+    def pad_cache(cache: dict, pad_to: int) -> dict:
+        """Grow prompt-sized KV caches to the serving max length (the
+        sequence axis is axis 2 for k/v/ckv/k_rope leaves; SSM states and
+        cross-attention K/V are length-free)."""
+        def pad(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in ("k", "v", "ckv", "k_rope"):
+                s = leaf.shape[2]
+                if s < pad_to:
+                    widths = [(0, 0)] * leaf.ndim
+                    widths[2] = (0, pad_to - s)
+                    return jnp.pad(leaf, widths)
+            return leaf
+        return jax.tree_util.tree_map_with_path(pad, cache)
+
+    def prefill(self, params, *, tokens=None, embeds=None, enc_embeds=None
+                ) -> Tuple[jax.Array, dict]:
+        """Process the prompt; return (last-position logits, cache)."""
+        cfg, rules = self.cfg, self.rules
+        x = self._embed(params, tokens, embeds)
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        cache: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe"):
+            if cfg.family == "dense":
+                x, kv, _ = _scan_blocks(cfg, rules, params["blocks"], x, pos,
+                                        kind="attn", make_cache=True)
+                cache["blocks"] = kv
+            else:
+                if cfg.n_dense_layers:
+                    x, kvd, _ = _scan_blocks(cfg, rules,
+                                             params["dense_blocks"], x, pos,
+                                             kind="attn", make_cache=True)
+                    cache["dense_blocks"] = kvd
+                x, kvm, _ = _scan_blocks(cfg, rules, params["moe_blocks"], x,
+                                         pos, kind="attn", make_cache=True)
+                cache["moe_blocks"] = kvm
+        elif cfg.family == "ssm":
+            x, st, _ = _scan_blocks(cfg, rules, params["blocks"], x, pos,
+                                    kind="mamba", make_cache=True)
+            cache["blocks"] = st
+        elif cfg.family == "hybrid":
+            x = self._hybrid_stack(params, x, pos, remat=False,
+                                   make_cache=True)
+            cache = self._last_hybrid_cache
+        elif cfg.family == "encdec":
+            enc = self._encode(params, enc_embeds, False)
+            x, kv, _ = _scan_blocks(cfg, rules, params["dec_blocks"], x, pos,
+                                    kind="attn", enc_out=enc,
+                                    make_cache=True)
+            cache["dec_blocks"] = kv
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, cache
+
+    def decode(self, params, cache: dict, token: jax.Array,
+               pos_index: jax.Array) -> Tuple[jax.Array, dict]:
+        """One decode step.  token: (B,) int32; pos_index: (B,) int32
+        (number of tokens already in the cache)."""
+        cfg, rules = self.cfg, self.rules
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+        positions = pos_index[:, None]
+        new_cache: Dict[str, Any] = {}
+        if cfg.family == "dense":
+            x, kv, _ = _scan_blocks(cfg, rules, params["blocks"], x,
+                                    positions, kind="attn",
+                                    caches=cache["blocks"],
+                                    cache_index=pos_index)
+            new_cache["blocks"] = kv
+        elif cfg.family == "moe":
+            if cfg.n_dense_layers:
+                x, kvd, _ = _scan_blocks(cfg, rules, params["dense_blocks"],
+                                         x, positions, kind="attn",
+                                         caches=cache["dense_blocks"],
+                                         cache_index=pos_index)
+                new_cache["dense_blocks"] = kvd
+            x, kvm, _ = _scan_blocks(cfg, rules, params["moe_blocks"], x,
+                                     positions, kind="attn",
+                                     caches=cache["moe_blocks"],
+                                     cache_index=pos_index)
+            new_cache["moe_blocks"] = kvm
+        elif cfg.family == "ssm":
+            x, st, _ = _scan_blocks(cfg, rules, params["blocks"], x,
+                                    positions, kind="mamba",
+                                    caches=cache["blocks"],
+                                    cache_index=pos_index)
+            new_cache["blocks"] = st
+        elif cfg.family == "hybrid":
+            x = self._hybrid_stack(params, x, positions, remat=False,
+                                   caches=cache, cache_index=pos_index)
+            new_cache = self._last_hybrid_cache
+        elif cfg.family == "encdec":
+            x, kv, _ = _scan_blocks(cfg, rules, params["dec_blocks"], x,
+                                    positions, kind="attn",
+                                    caches=cache["dec_blocks"],
+                                    cache_index=pos_index,
+                                    enc_out=None)
+            new_cache["dec_blocks"] = kv
+        logits = self._logits(params, x)
+        return logits[:, 0, :], new_cache
+
+    # ------------------------------------------------- abstract cache
+    def abstract_cache(self, batch: int, max_len: int,
+                       enc_len: Optional[int] = None) -> dict:
+        """ShapeDtypeStruct cache tree for serve-step dry-runs."""
+        cfg = self.cfg
+        dt = _dtype_of(cfg)
+        rules = self.rules
+
+        def sds(shape, *logical):
+            sh = (rules.fitted_sharding(shape, *logical)
+                  if rules.mesh is not None else None)
+            if sh is not None:
+                return jax.ShapeDtypeStruct(shape, dt, sharding=sh)
+            return jax.ShapeDtypeStruct(shape, dt)
+
+        hd = cfg.resolved_head_dim
+        Hkv = cfg.n_kv_heads
+        model_n = rules.axis_size(rules.model_axis)
+        batch_ok = rules.batch_size_divides(batch)
+        # long-context single-sequence decode: shard the cache SEQ axis
+        # over 'data' (context parallelism) instead of the batch axis
+        b_ax = "batch" if batch_ok else None
+        s_ax = None if batch_ok else "seq"
+        if not batch_ok:
+            rules = dataclasses.replace(rules, seq_axis=rules.fsdp_axis)
+        # TP placement inside the cache: kv-heads if divisible, else
+        # head_dim (both contract cleanly in the attention einsum)
+        if Hkv and Hkv % model_n == 0:
+            h_ax, d_ax = "kv", None
+        elif hd and hd % model_n == 0:
+            h_ax, d_ax = None, "model"
+        else:
+            h_ax, d_ax = None, None
+
+        def kv_cache(L):
+            return {"k": sds((L, batch, max_len, Hkv, hd),
+                             None, b_ax, s_ax, h_ax, d_ax),
+                    "v": sds((L, batch, max_len, Hkv, hd),
+                             None, b_ax, s_ax, h_ax, d_ax)}
+
+        def mla_cache(L):
+            r_ax = "model" if cfg.kv_lora_rank % model_n == 0 else None
+            return {"ckv": sds((L, batch, max_len, cfg.kv_lora_rank),
+                               None, b_ax, s_ax, r_ax),
+                    "k_rope": sds((L, batch, max_len, cfg.qk_rope_head_dim),
+                                  None, b_ax, s_ax, None)}
+
+        def mamba_state(L):
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            c_ax = "model" if conv_dim % model_n == 0 else None
+            h_ax2 = "model" if cfg.ssm_heads % model_n == 0 else None
+            return {
+                "conv": sds((L, batch, cfg.ssm_conv - 1, conv_dim),
+                            None, b_ax, None, c_ax),
+                "ssm": jax.ShapeDtypeStruct(
+                    (L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                     cfg.ssm_state), jnp.float32,
+                    sharding=rules.fitted_sharding(
+                        (L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), None, b_ax, h_ax2, None, None)
+                    if rules.mesh is not None else None),
+            }
+
+        if cfg.family == "dense":
+            return {"blocks": (mla_cache(cfg.n_layers) if cfg.use_mla
+                               else kv_cache(cfg.n_layers))}
+        if cfg.family == "moe":
+            mkc = mla_cache if cfg.use_mla else kv_cache
+            out = {"moe_blocks": mkc(cfg.n_layers - cfg.n_dense_layers)}
+            if cfg.n_dense_layers:
+                out["dense_blocks"] = mkc(cfg.n_dense_layers)
+            return out
+        if cfg.family == "ssm":
+            return {"blocks": mamba_state(cfg.n_layers)}
+        if cfg.family == "hybrid":
+            n_seg = cfg.n_layers // cfg.attn_every
+            return {"mamba": mamba_state(cfg.n_layers),
+                    "attn": kv_cache(n_seg)}
+        if cfg.family == "encdec":
+            c = kv_cache(cfg.n_layers)
+            c["cross_k"] = sds((cfg.n_layers, batch, enc_len or max_len,
+                                Hkv, hd), None, b_ax, None, h_ax, d_ax)
+            c["cross_v"] = sds((cfg.n_layers, batch, enc_len or max_len,
+                                Hkv, hd), None, b_ax, None, h_ax, d_ax)
+            return {"dec_blocks": c}
+        raise ValueError(cfg.family)

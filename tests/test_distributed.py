@@ -1,0 +1,113 @@
+"""Distributed ring-GEMM tests.  jax locks the device count at first
+init, so multi-device cases run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count set there."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=300)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+COMMON = """
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import distributed as dist
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+"""
+
+
+def test_distributed_gemm_ring_matches_oracle():
+    out = run_with_devices(COMMON + """
+A = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+B = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+want = np.asarray(A @ B)
+for mode in ["ring", "gspmd"]:
+    C = dist.distributed_gemm(A, B, mesh, mode=mode)
+    err = np.abs(np.asarray(C) - want).max()
+    assert err < 1e-3, (mode, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_tp_matmul_column_row_roundtrip():
+    out = run_with_devices(COMMON + """
+x = jnp.asarray(rng.standard_normal((2, 32, 128)), jnp.float32)
+w1 = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+w2 = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+want = np.asarray(jnp.einsum('bsf,fd->bsd',
+                  jnp.einsum('bsd,df->bsf', x, w1), w2))
+for mode in ["ring", "gspmd"]:
+    y = dist.tp_matmul(x, w1, mesh, kind="column", mode=mode)
+    z = dist.tp_matmul(y, w2, mesh, kind="row", mode=mode)
+    err = np.abs(np.asarray(z) - want).max()
+    assert err < 5e-3, (mode, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_ring_uses_collective_permute_not_allgather():
+    """The BLASX overlap schedule must lower to neighbor ppermutes (the
+    ICI 'P2P' path), not monolithic all-gathers."""
+    out = run_with_devices(COMMON + """
+A = jnp.zeros((64, 128), jnp.float32)
+B = jnp.zeros((128, 96), jnp.float32)
+ring = jax.jit(lambda a, b: dist.distributed_gemm(a, b, mesh, mode="ring"))
+txt = ring.lower(A, B).compile().as_text()
+n_perm = txt.count("collective-permute")
+assert n_perm >= 2, f"expected ring ppermutes, found {n_perm}"
+print("OK", n_perm)
+""")
+    assert "OK" in out
+
+
+def test_ring_odd_sizes_raise_cleanly():
+    out = run_with_devices(COMMON + """
+from repro.core.distributed import ring_reduce_scatter_matmul
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+x = jnp.zeros((2, 30, 128), jnp.float32)  # 30 rows not divisible by 4
+w = jnp.zeros((128, 64), jnp.float32)
+try:
+    dist.tp_matmul(x, jnp.zeros((128, 64), jnp.float32), mesh, kind="row")
+except Exception:
+    print("OK raised")
+else:
+    # 30*2=60 rows over ring of 4 -> 60%4==0 actually fine; force odd
+    try:
+        xo = jnp.zeros((1, 3, 128), jnp.float32)
+        dist.tp_matmul(xo, w, mesh, kind="row")
+        print("unexpected success")
+    except Exception:
+        print("OK raised")
+""")
+    assert "OK raised" in out
+
+
+def test_bf16_ring_numerics():
+    out = run_with_devices(COMMON + """
+A = jnp.asarray(rng.standard_normal((64, 128)), jnp.bfloat16)
+B = jnp.asarray(rng.standard_normal((128, 96)), jnp.bfloat16)
+C = dist.distributed_gemm(A, B, mesh, mode="ring")
+want = np.asarray(jnp.dot(A.astype(jnp.float32), B.astype(jnp.float32)))
+err = np.abs(np.asarray(C, np.float32) - want).max()
+assert err < 1.0, err   # bf16 tolerance
+print("OK")
+""")
+    assert "OK" in out

@@ -1,0 +1,168 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+always against the pure-jnp oracle, in interpret mode (CPU container)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mk(m, k, n, dtype, seed=0):
+    r1 = np.random.default_rng(seed)
+    a = r1.standard_normal((m, k)).astype(dtype)
+    b = r1.standard_normal((k, n)).astype(dtype)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+SHAPES = [
+    (8, 8, 8),            # tiny
+    (128, 128, 128),      # exactly one block
+    (256, 512, 384),      # multi-block, aligned
+    (100, 70, 130),       # ragged everything (padding path)
+    (1, 200, 300),        # degenerate M
+    (513, 129, 257),      # off-by-one over alignment
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    a, b = _mk(m, k, n, dtype)
+    out = ops.matmul(a, b, interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu", "silu", "tanh"])
+def test_matmul_fused_epilogue(activation):
+    a, b = _mk(96, 64, 160, np.float32, seed=3)
+    bias = jnp.asarray(np.random.default_rng(4).standard_normal(160),
+                       jnp.float32)
+    out = ops.matmul(a, b, bias, activation=activation, interpret=True)
+    want = ref.matmul_ref(a, b, bias, activation=activation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_explicit_blocks():
+    a, b = _mk(256, 256, 256, np.float32, seed=5)
+    for bm, bn, bk in [(128, 128, 128), (64, 128, 256), (256, 256, 128)]:
+        out = ops.matmul(a, b, block_m=bm, block_n=bn, block_k=bk,
+                         interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_out_dtype_cast():
+    a, b = _mk(64, 64, 64, np.float32, seed=6)
+    out = ops.matmul(a, b, out_dtype=jnp.bfloat16, interpret=True)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_matmul_shape_errors():
+    a, b = _mk(32, 16, 32, np.float32)
+    with pytest.raises(ValueError):
+        ops.matmul(a, jnp.zeros((17, 32), jnp.float32), interpret=True)
+    with pytest.raises(ValueError):
+        ops.matmul(a, b, bias=jnp.zeros((7,)), interpret=True)
+
+
+def test_block_heuristic_respects_vmem():
+    from repro.kernels.ops import VMEM_BUDGET, default_blocks
+    for m, n, k, isz in [(8192, 8192, 8192, 2), (4096, 11008, 4096, 4),
+                         (33, 100000, 7, 4)]:
+        bm, bn, bk = default_blocks(m, n, k, isz)
+        wset = (bm * bk + bk * bn) * isz + bm * bn * 4 + bm * bn * isz
+        assert wset <= VMEM_BUDGET
+        assert bn % 128 == 0 or bn >= n
+        assert bk % 128 == 0 or bk >= k
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150),
+    alpha_act=st.sampled_from([None, "relu", "silu"]),
+    use_bias=st.booleans(),
+)
+def test_matmul_property_random_shapes(m, k, n, alpha_act, use_bias):
+    """Property: kernel == oracle for arbitrary shapes (padding path)."""
+    a, b = _mk(m, k, n, np.float32, seed=m * 7919 + k * 31 + n)
+    bias = (jnp.asarray(np.random.default_rng(n).standard_normal(n),
+                        jnp.float32) if use_bias else None)
+    out = ops.matmul(a, b, bias, activation=alpha_act, interpret=True)
+    want = ref.matmul_ref(a, b, bias, activation=alpha_act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_kernel_inside_blasx_runtime():
+    """The TPU tile kernel composes with the reproduction runtime."""
+    from repro.core import gemm
+    from repro.core.runtime import RuntimeConfig
+    rng = np.random.default_rng(8)
+    A = rng.standard_normal((96, 64)).astype(np.float32)
+    B = rng.standard_normal((64, 96)).astype(np.float32)
+    out = gemm(A, B, tile=32,
+               config=RuntimeConfig(n_devices=2, mode="sim",
+                                    kernel="pallas"))
+    np.testing.assert_allclose(out, A @ B, rtol=1e-4, atol=1e-4)
+
+
+# ===================================================== flash attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+FLASH_CASES = [
+    # (B, Sq, Sk, H, Hkv, D, causal)
+    (2, 256, 256, 4, 4, 64, True),     # MHA causal, aligned
+    (1, 200, 200, 4, 2, 32, True),     # GQA, ragged (padding path)
+    (2, 128, 384, 8, 2, 64, False),    # cross-attn shape, GQA 4x
+    (1, 130, 130, 2, 1, 16, True),     # MQA, tiny head dim
+    (1, 64, 64, 1, 1, 128, True),      # single head, single block
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,D,causal", FLASH_CASES)
+def test_flash_attention_vs_oracle(B, Sq, Sk, H, Hkv, D, causal):
+    rng = np.random.default_rng(B * 31 + Sq)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sk, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sk, Hkv, D)), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                        interpret=True)
+    r = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 128, 4, 64)), jnp.bfloat16)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    r = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_block_shape_independence():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.standard_normal((1, 192, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 192, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 192, 2, 32)), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                            interpret=True)
+            for bq, bk in [(64, 64), (64, 128), (192, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on the system's invariants: heap arena
+integrity, ALRU pinning discipline, MESI-X single-writer consistency,
+taskization flop accounting, tiled-GEMM correctness over random shapes."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gemm, ref_gemm
+from repro.core.alru import Alru
+from repro.core.coherence import MesixDirectory
+from repro.core.heap import BlasxHeap
+from repro.core.runtime import RuntimeConfig
+from repro.core.task import taskize_gemm, total_flops
+from repro.core.tiling import TileGrid, TileKey
+
+
+# ------------------------------------------------------------------- heap
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 400)),
+                min_size=1, max_size=120))
+def test_heap_invariants_under_random_traces(ops):
+    """After any alloc/free trace: segments exactly tile the arena, free
+    neighbors are coalesced, accounting is consistent."""
+    h = BlasxHeap(4096)
+    live = []
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            off = h.malloc(size)
+            if off is not None:
+                live.append(off)
+        else:
+            h.free(live.pop(len(live) % max(1, len(live)) - 1))
+        h.check_invariants()
+    for off in live:
+        h.free(off)
+    h.check_invariants()
+    assert h.free_bytes == 4096
+
+
+# ------------------------------------------------------------------- ALRU
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=80),
+       st.integers(2, 6))
+def test_alru_never_evicts_pinned_blocks(accesses, cap_tiles):
+    """Property (the A in ALRU): a block with readers > 0 survives any
+    sequence of other translations."""
+    heap = BlasxHeap(cap_tiles * 100)
+    a = Alru(0, heap)
+    a.on_evict = lambda dev, key: None
+    pinned = TileKey("P", 0, 0)
+    blk = a.translate(pinned, 100)   # reader = 1, never released
+    assert blk is not None
+    for t in accesses:
+        key = TileKey("A", 0, t)
+        b = a.translate(key, 100)
+        if b is not None and key != pinned:
+            a.release(key)
+        a.check_invariants()
+        assert pinned in a           # the pinned block must survive
+
+
+# ----------------------------------------------------------------- MESI-X
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2),        # device
+                          st.sampled_from(["fill", "evict", "write"])),
+                min_size=1, max_size=60))
+def test_mesix_states_always_consistent(events):
+    d = MesixDirectory(3, [[0, 1, 2]])
+    key = TileKey("C", 1, 1)
+    holders = set()
+    for dev, ev in events:
+        if ev == "fill":
+            d.on_fill(key, dev)
+            holders.add(dev)
+        elif ev == "evict":
+            d.on_evict(key, dev)
+            holders.discard(dev)
+        else:
+            d.on_write(key, dev)
+            holders.clear()          # ephemeral M -> I invalidates all
+        d.check_invariants()
+        want = "I" if not holders else ("E" if len(holders) == 1 else "S")
+        assert d.state(key) == want
+
+
+# ---------------------------------------------------------------- tiling
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 300), st.integers(1, 64))
+def test_tile_grid_partitions_exactly(rows, cols, tile):
+    g = TileGrid("A", rows, cols, tile)
+    area = sum(g.tile_shape(i, j)[0] * g.tile_shape(i, j)[1]
+               for i in range(g.n_tile_rows) for j in range(g.n_tile_cols))
+    assert area == rows * cols
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(32, 200), st.integers(32, 200), st.integers(32, 200),
+       st.integers(16, 96))
+def test_gemm_taskization_flops_exact(m, k, n, tile):
+    ga = TileGrid("A", m, k, tile)
+    gb = TileGrid("B", k, n, tile)
+    gc = TileGrid("C", m, n, tile)
+    tasks = taskize_gemm(ga, gb, gc, "N", "N", 1.0, 0.0)
+    assert total_flops(tasks) == 2 * m * k * n
+    # every output tile owned by exactly one task
+    outs = [t.out for t in tasks]
+    assert len(outs) == len(set(outs)) == gc.n_tiles
+
+
+# ------------------------------------------------------ end-to-end gemm
+@settings(max_examples=10, deadline=None)
+@given(st.integers(17, 120), st.integers(17, 120), st.integers(17, 120),
+       st.integers(16, 64), st.integers(1, 3))
+def test_gemm_random_shapes_match_oracle(m, k, n, tile, n_devices):
+    rng = np.random.default_rng(m * 7 + k * 3 + n)
+    A = rng.standard_normal((m, k))
+    B = rng.standard_normal((k, n))
+    out = gemm(A, B, tile=tile,
+               config=RuntimeConfig(n_devices=n_devices, mode="sim",
+                                    cache_bytes=8 << 20))
+    np.testing.assert_allclose(out, A @ B, rtol=1e-10, atol=1e-10)

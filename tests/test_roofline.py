@@ -1,0 +1,78 @@
+"""Roofline machinery: HLO collective parser, wire-byte weighting, term
+math, and MODEL_FLOPS accounting."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as rf
+
+
+HLO_SAMPLE = """
+HloModule test
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %c = f32[16,128]{1,0} constant(0)
+  %ar.1 = f32[16,128]{1,0} all-reduce(%p0), to_apply=%add
+  %rs = f32[4,128]{1,0} reduce-scatter(f32[16,128]{1,0} %ar.1), dimensions={0}
+  %cp = f32[16,128]{1,0} collective-permute(%ar.1), source_target_pairs={{0,1}}
+  ROOT %out = f32[16,128]{1,0} add(%ar.1, %cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert rf.shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert rf.shape_bytes("bf16[2,3]") == 12
+    assert rf.shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert rf.shape_bytes("pred[]") == 0 or rf.shape_bytes("pred[]") >= 0
+
+
+def test_collective_parser_counts_operands():
+    out = rf.collective_bytes(HLO_SAMPLE)
+    base = 16 * 128 * 4
+    assert out["all-gather"] == base          # operand p0
+    assert out["all-reduce"] == base
+    assert out["reduce-scatter"] == base      # inline-typed operand
+    assert out["collective-permute"] == base
+    assert out["all-to-all"] == 0
+
+
+def test_wire_weighting():
+    bd = {"all-reduce": 100, "all-gather": 50, "reduce-scatter": 50,
+          "all-to-all": 0, "collective-permute": 10}
+    assert rf.wire_bytes(bd) == 2 * 100 + 50 + 50 + 10
+
+
+def test_roofline_terms_and_dominance():
+    r = rf.Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                    hlo_flops=256 * rf.PEAK_FLOPS,        # 1 s compute
+                    hlo_bytes=256 * rf.HBM_BW * 2,        # 2 s memory
+                    coll_bytes=256 * rf.ICI_BW * 0.5,     # 0.5 s collective
+                    coll_breakdown={"all-gather": 1},     # weight 1.0
+                    model_flops=256 * rf.PEAK_FLOPS * 0.5)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert abs(r.collective_s - 0.5) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.useful_flops_frac - 0.5) < 1e-9
+    assert abs(r.roofline_frac - 0.25) < 1e-9   # 0.5s ideal vs 2s bound
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("olmo_1b")
+    tr = rf.model_flops_for(cfg, SHAPES["train_4k"])
+    pf = rf.model_flops_for(cfg, SHAPES["prefill_32k"])
+    dc = rf.model_flops_for(cfg, SHAPES["decode_32k"])
+    tokens_tr = 256 * 4096
+    assert tr == pytest.approx(6 * cfg.param_count() * tokens_tr)
+    assert pf == pytest.approx(2 * cfg.param_count() * 32 * 32768)
+    assert dc == pytest.approx(2 * cfg.param_count() * 128)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("deepseek_v3_671b")
+    tr = rf.model_flops_for(cfg, SHAPES["train_4k"])
+    assert tr < 6 * cfg.param_count() * 256 * 4096 * 0.2  # far below total
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 256 * 4096)

@@ -1,0 +1,175 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, and the end-to-end train/serve drivers on reduced configs."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import DataConfig, DataIterator, batch_at_step
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = adamw.init_state(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 5e-4) < 1e-8          # mid-warmup
+    assert abs(lrs[2] - 1e-3) < 1e-8          # peak
+    assert lrs[3] < lrs[2]                    # decaying
+    assert abs(lrs[4] - 1e-4) < 1e-8          # floor
+
+
+def test_grad_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}        # norm 5
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_int8_error_feedback_compression_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    err = jnp.zeros_like(g)
+    # accumulate dequantized payloads over steps with a CONSTANT gradient:
+    # error feedback must make the running mean converge to g
+    total = jnp.zeros_like(g)
+    steps = 64
+    for _ in range(steps):
+        q, scale, err = adamw.compress_int8(g, err)
+        total = total + adamw.decompress_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(total / steps), np.asarray(g),
+                               atol=2e-2)
+
+
+# -------------------------------------------------------------------- data
+def test_data_determinism_and_restart_exactness():
+    dc = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=7)
+    b5a = batch_at_step(dc, 5)
+    b5b = batch_at_step(dc, 5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+
+    it = DataIterator(dc)
+    seen = [next(it)["tokens"] for _ in range(4)]
+    state = it.state()
+    rest1 = [next(it)["tokens"] for _ in range(3)]
+    it2 = DataIterator(dc)
+    it2.restore(state)
+    rest2 = [next(it2)["tokens"] for _ in range(3)]
+    for a, b in zip(rest1, rest2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_data_labels_are_shifted_tokens():
+    dc = DataConfig(vocab_size=64, seq_len=8, global_batch=2, seed=1)
+    b = batch_at_step(dc, 0)
+    assert b["tokens"].shape == (2, 8)
+    assert b["labels"].shape == (2, 8)
+    # label[t] is the next token of an (a*x+b)%V chain most of the time
+    # (5% noise) — just check dtype/range here
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64
+
+
+# ------------------------------------------------------------- checkpointer
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    ck.save(10, tree, extra={"loss": 1.5})
+    out, extra = ck.restore(10, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert extra["loss"] == 1.5
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"x": jnp.zeros((3, 3))})
+
+
+def test_checkpoint_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"x": jnp.arange(10_000).astype(jnp.float32)}
+    ck.save(5, tree, blocking=False)
+    ck.wait()
+    out, _ = ck.restore(5, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(tree["x"]))
+
+
+def test_checkpoint_resharding_hook(tmp_path):
+    """Elastic restore: a sharding_fn re-places arrays arbitrarily."""
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.arange(8).astype(jnp.float32)}
+    ck.save(1, tree)
+    calls = []
+
+    def reshard(path, arr):
+        calls.append(path)
+        return jax.device_put(jnp.asarray(arr) * 1.0)
+
+    out, _ = ck.restore(1, tree, sharding_fn=reshard)
+    assert calls and "w" in calls[0]
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8))
+
+
+# ----------------------------------------------------------- train driver
+def test_train_loop_loss_decreases(tmp_path):
+    from repro.launch.train import TrainConfig, run
+    out = run(TrainConfig(arch="qwen3_0_6b", smoke=True, steps=30,
+                          seq_len=32, global_batch=4,
+                          ckpt_dir=str(tmp_path / "ck"), ckpt_every=10,
+                          log_every=0))
+    assert out["final_step"] == 30
+    assert out["last_loss"] < out["first_loss"]  # learnable synthetic data
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    from repro.launch.train import TrainConfig, run
+    ck = str(tmp_path / "ck")
+    base = dict(arch="qwen3_0_6b", smoke=True, seq_len=32, global_batch=4,
+                ckpt_dir=ck, ckpt_every=5, log_every=0)
+    run(TrainConfig(steps=10, **base))
+    out = run(TrainConfig(steps=20, **base))     # resumes at 10
+    assert out["final_step"] == 20
+    # resumed run trained only the remaining 10 steps
+    assert len(out["losses"]) == 10
+
+
+def test_serve_driver_completes_all_requests():
+    from repro.launch.serve import ServeConfig, run
+    out = run(ServeConfig(arch="olmo_1b", smoke=True, batch_slots=3,
+                          prompt_len=8, max_len=32, requests=5, max_new=6))
+    assert out["requests"] == 5
+    assert out["tokens"] == 5 * 6
+    assert out["tok_per_s"] > 0
