@@ -1,0 +1,107 @@
+"""Warm-context vs per-call H2D traffic (the api_redesign headline).
+
+Two chained workloads run twice each — once as isolated per-call
+invocations (every call builds and discards its runtime: the seed
+API's behaviour) and once through a single persistent ``BlasxContext``
+whose ALRU/MESI-X tile caches stay warm:
+
+* ``serve``  — an LM-projection shape: R requests of ``x @ W`` against
+  one shared weight handle (the batched-serving pattern);
+* ``sweep``  — a Cholesky-style ``syrk -> trsm -> gemm`` chain reusing
+  one operand handle across all three routines.
+
+The context must move strictly fewer H2D bytes; the ledger deltas per
+call come from ``ctx.calls``.  Asserted in
+``tests/test_api.py::test_chained_beats_per_call_api_multi_device``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_context_reuse
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import BlasxContext
+from repro.core.runtime import RuntimeConfig
+
+N = 1024
+TILE = 128
+REQUESTS = 6
+TOPOLOGY = dict(n_devices=3, p2p_groups=[[0], [1, 2]],
+                cache_bytes=256 << 20, mode="sim")
+
+
+def _ctx() -> BlasxContext:
+    return BlasxContext(RuntimeConfig(policy="blasx", **TOPOLOGY), tile=TILE)
+
+
+def _serve_bytes(persistent: bool, rng) -> int:
+    """R gemm calls sharing one weight matrix."""
+    W = rng.standard_normal((N, N))
+    xs = [rng.standard_normal((N // 4, N)) for _ in range(REQUESTS)]
+    if persistent:
+        with _ctx() as ctx:
+            Wh = ctx.tile(W)
+            for x in xs:
+                ctx.gemm(ctx.tile(x), Wh)
+            return sum(c.h2d_bytes for c in ctx.calls)
+    total = 0
+    for x in xs:
+        with _ctx() as ctx:               # cold context per call
+            ctx.gemm(x, W)
+            total += sum(c.h2d_bytes for c in ctx.calls)
+    return total
+
+
+def _sweep_bytes(persistent: bool, rng) -> int:
+    """syrk -> trsm -> gemm all touching the same A."""
+    A = rng.standard_normal((N, N // 2))
+    L = rng.standard_normal((N, N)) / N + np.eye(N)
+
+    def chain(ctx):
+        Ah = ctx.tile(A)
+        ctx.syrk(Ah, uplo="U")
+        X = ctx.trsm(ctx.tile(L), Ah, uplo="L")
+        ctx.gemm(X, Ah, transb="T")
+
+    if persistent:
+        with _ctx() as ctx:
+            chain(ctx)
+            return sum(c.h2d_bytes for c in ctx.calls)
+    total = 0
+    with _ctx() as c1:
+        c1.syrk(A, uplo="U")
+        total += sum(c.h2d_bytes for c in c1.calls)
+    with _ctx() as c2:
+        X = c2.trsm(L, A, uplo="L")
+        total += sum(c.h2d_bytes for c in c2.calls)
+    with _ctx() as c3:
+        c3.gemm(X.array(), A, transb="T")
+        total += sum(c.h2d_bytes for c in c3.calls)
+    return total
+
+
+def run():
+    rows = []
+    for name, fn in (("serve", _serve_bytes), ("sweep", _sweep_bytes)):
+        cold = fn(False, np.random.default_rng(0))
+        warm = fn(True, np.random.default_rng(0))
+        assert warm < cold, f"{name}: warm {warm} !< cold {cold}"
+        rows.append({
+            "name": f"context_reuse/{name}/N{N}",
+            "us_per_call": "",
+            "cold_h2d_MB": f"{cold/1e6:.1f}",
+            "warm_h2d_MB": f"{warm/1e6:.1f}",
+            "saved": f"{1 - warm/cold:.1%}",
+        })
+    return rows
+
+
+def main() -> None:
+    print("workload   cold H2D     warm H2D    saved")
+    for r in run():
+        print(f"{r['name']:28s} {r['cold_h2d_MB']:>8s}MB "
+              f"{r['warm_h2d_MB']:>8s}MB   {r['saved']}")
+
+
+if __name__ == "__main__":
+    main()

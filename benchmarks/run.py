@@ -11,15 +11,16 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   table4  link model / transfer classes          (paper Table IV)
   table5  communication volume by policy         (paper Table V)
   pallas  TPU tile kernel (interpret) + blocks   (beyond paper)
+  context_reuse  warm-context vs per-call H2D    (two-layer API)
 """
 from __future__ import annotations
 
 import sys
 import time
 
-from . import (fig5_heap, fig7_throughput, fig8_load_balance,
-               fig10_tile_size, pallas_kernel, table1_gemm_fraction,
-               table4_link_model, table5_comm_volume)
+from . import (bench_context_reuse, fig5_heap, fig7_throughput,
+               fig8_load_balance, fig10_tile_size, pallas_kernel,
+               table1_gemm_fraction, table4_link_model, table5_comm_volume)
 from .common import rows_to_csv
 
 MODULES = [
@@ -31,6 +32,7 @@ MODULES = [
     ("table4", table4_link_model),
     ("table5", table5_comm_volume),
     ("pallas", pallas_kernel),
+    ("context_reuse", bench_context_reuse),
 ]
 
 

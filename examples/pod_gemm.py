@@ -21,6 +21,7 @@ import jax                      # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
+from repro.api import BlasxContext  # noqa: E402
 from repro.core import distributed as dist  # noqa: E402
 
 
@@ -29,7 +30,11 @@ def main():
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((1024, 768)), jnp.float32)
-    want = np.asarray(A @ B)
+    # host-side oracle through the persistent-context API (the tiled
+    # engine whose L2/overlap insight the ring schedule ports to ICI)
+    with BlasxContext(tile=256) as ctx:
+        want = np.array(ctx.gemm(np.asarray(A), np.asarray(B)).array(),
+                        dtype=np.float32)
 
     for mode in ("gspmd", "ring"):
         f = jax.jit(lambda a, b, m=mode: dist.distributed_gemm(

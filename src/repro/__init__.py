@@ -1,0 +1,36 @@
+"""repro — a growing reproduction of BLASX (locality-aware multi-GPU
+L3 BLAS) on the jax/pallas substrate.
+
+Public entry points:
+
+* ``repro.api``  — the two-layer BLAS API: persistent
+  :class:`~repro.api.BlasxContext` handles with warm tile caches,
+  async :class:`~repro.api.BlasFuture` submission, batched GEMM, and
+  the CBLAS-compatible ``cblas_*`` legacy layer.
+* ``repro.core`` — the runtime underneath: tiling, ALRU/MESI-X tile
+  caches, the dynamic scheduler, and legacy numpy-in/numpy-out
+  routines.
+
+Heavier subsystems (``repro.models``, ``repro.kernels``,
+``repro.launch`` ...) import jax and are intentionally NOT imported
+here; pull them in explicitly.
+"""
+from .core import (BlasxRuntime, RuntimeConfig, TiledMatrix, TileGrid,
+                   TileKey, gemm, ref_gemm, ref_symm, ref_syr2k, ref_syrk,
+                   ref_trmm, ref_trsm, symm, syr2k, syrk, trmm, trsm)
+from .api import (BlasFuture, BlasxContext, CallRecord, MatrixHandle,
+                  cblas_dgemm, cblas_dsymm, cblas_dsyr2k, cblas_dsyrk,
+                  cblas_dtrmm, cblas_dtrsm, default_context,
+                  gemm_batched, gemm_strided_batched, set_default_context)
+
+__all__ = [
+    "BlasxContext", "MatrixHandle", "CallRecord", "BlasFuture",
+    "default_context", "set_default_context",
+    "gemm_batched", "gemm_strided_batched",
+    "cblas_dgemm", "cblas_dsymm", "cblas_dsyrk", "cblas_dsyr2k",
+    "cblas_dtrmm", "cblas_dtrsm",
+    "gemm", "syrk", "syr2k", "symm", "trmm", "trsm",
+    "ref_gemm", "ref_syrk", "ref_syr2k", "ref_symm", "ref_trmm",
+    "ref_trsm",
+    "BlasxRuntime", "RuntimeConfig", "TiledMatrix", "TileGrid", "TileKey",
+]

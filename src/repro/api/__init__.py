@@ -1,0 +1,36 @@
+"""repro.api — the two-layer public BLAS API (GSL/CBLAS design).
+
+High-level layer (recommended): :class:`BlasxContext` — a persistent
+handle (cuBLAS-handle analogue) whose ALRU/MESI-X tile caches stay
+warm across calls, with :class:`MatrixHandle` device-resident
+operands, per-call ledger snapshots (:class:`CallRecord`), async
+submission (:class:`BlasFuture`) and batched GEMM for serving-shaped
+workloads.
+
+Low-level layer: ``repro.api.cblas`` — strict CBLAS signatures
+(``cblas_dgemm`` et al.) with order/leading-dimension semantics and
+in-place output updates, for legacy callers.
+
+The legacy numpy-in/numpy-out functions in ``repro.core.blas3`` are
+thin wrappers over :func:`default_context`.
+"""
+from .batch import gemm_batched, gemm_strided_batched
+from .cblas import (CblasColMajor, CblasLeft, CblasLower, CblasNonUnit,
+                    CblasNoTrans, CblasRight, CblasRowMajor, CblasTrans,
+                    CblasConjTrans, CblasUnit, CblasUpper, cblas_dgemm,
+                    cblas_dsymm, cblas_dsyr2k, cblas_dsyrk, cblas_dtrmm,
+                    cblas_dtrsm)
+from .context import (BlasxContext, CallRecord, MatrixHandle,
+                      default_context, set_default_context)
+from .futures import BlasFuture
+
+__all__ = [
+    "BlasxContext", "MatrixHandle", "CallRecord", "BlasFuture",
+    "default_context", "set_default_context",
+    "gemm_batched", "gemm_strided_batched",
+    "cblas_dgemm", "cblas_dsymm", "cblas_dsyrk", "cblas_dsyr2k",
+    "cblas_dtrmm", "cblas_dtrsm",
+    "CblasRowMajor", "CblasColMajor", "CblasNoTrans", "CblasTrans",
+    "CblasConjTrans", "CblasUpper", "CblasLower", "CblasNonUnit",
+    "CblasUnit", "CblasLeft", "CblasRight",
+]

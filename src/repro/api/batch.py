@@ -1,0 +1,88 @@
+"""Batched GEMM for serving-shaped workloads (cuBLAS batched analogues).
+
+Serving traffic is many small/medium GEMMs against shared weights
+(per-layer projections, per-request adapters).  Both entry points run
+every problem through ONE context, so shared operands — e.g. the same
+weight handle across the whole batch — are fetched once and then served
+from the warm tile caches.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def gemm_batched(ctx, As: Sequence, Bs: Sequence,
+                 Cs: Optional[Sequence] = None, *, alpha: float = 1.0,
+                 beta: float = 0.0, transa: str = "N", transb: str = "N",
+                 tile: Optional[int] = None) -> List:
+    """Pointer-array batch: ``out[i] = alpha*op(As[i])@op(Bs[i]) +
+    beta*Cs[i]``.
+
+    ``As``/``Bs`` may mix numpy arrays and ``MatrixHandle``s; repeating
+    one handle across the batch (shared weights) is the intended warm
+    path.  Returns a list of ``MatrixHandle``s.
+    """
+    if len(As) != len(Bs):
+        raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Bs)} B's")
+    if Cs is not None and len(Cs) != len(As):
+        raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Cs)} C's")
+    # pre-register handles so every batch entry shares tile keys
+    Ahs = [ctx.tile(a, tile) for a in As]
+    Bhs = [ctx.tile(b, tile) for b in Bs]
+    # synchronous loop, NOT ctx.submit per entry: the context serializes
+    # execution on its lock anyway, and nesting submissions would
+    # deadlock the single-worker executor when the batch itself was
+    # submitted asynchronously (ctx.submit("gemm_batched", ...)).
+    return [
+        ctx.gemm(Ahs[i], Bhs[i], None if Cs is None else Cs[i],
+                 alpha=alpha, beta=beta, transa=transa, transb=transb,
+                 tile=tile)
+        for i in range(len(As))
+    ]
+
+
+def gemm_strided_batched(ctx, A, B, C=None, *, alpha: float = 1.0,
+                         beta: float = 0.0, transa: str = "N",
+                         transb: str = "N",
+                         tile: Optional[int] = None) -> np.ndarray:
+    """Strided batch over 3-D operands (batch axis first).
+
+    A 2-D operand broadcasts across the batch (stride 0 — the shared
+    weight matrix of an LM projection); its handle is registered once
+    so all batch entries hit the same cached tiles.  Returns the
+    stacked 3-D result.
+    """
+    A = np.asarray(A) if not hasattr(A, "array") else A
+    B = np.asarray(B) if not hasattr(B, "array") else B
+
+    def _entries(x):
+        if hasattr(x, "array") or np.asarray(x).ndim == 2:
+            return None  # broadcast
+        a = np.asarray(x)
+        if a.ndim != 3:
+            raise ValueError(f"strided batch operand must be 2-D or 3-D, "
+                             f"got {a.shape}")
+        return a
+
+    a3, b3 = _entries(A), _entries(B)
+    c3 = None if C is None else _entries(C)
+    sizes = {x.shape[0] for x in (a3, b3, c3) if x is not None}
+    if len(sizes) > 1:
+        raise ValueError(f"inconsistent batch sizes {sorted(sizes)}")
+    if not sizes:
+        raise ValueError("at least one operand must be 3-D")
+    nb = sizes.pop()
+
+    # broadcast operands become one shared handle (stride-0 reuse)
+    Ah = ctx.tile(A, tile) if a3 is None else None
+    Bh = ctx.tile(B, tile) if b3 is None else None
+    outs = gemm_batched(
+        ctx,
+        [Ah if a3 is None else a3[i] for i in range(nb)],
+        [Bh if b3 is None else b3[i] for i in range(nb)],
+        None if C is None else [C if c3 is None else c3[i]
+                                for i in range(nb)],
+        alpha=alpha, beta=beta, transa=transa, transb=transb, tile=tile)
+    return np.stack([o.array() for o in outs])

@@ -1,0 +1,203 @@
+"""CBLAS-compatible legacy layer (the paper's backward-compatibility
+goal, after the GSL two-layer design).
+
+Strict C-interface signatures for the six double-precision L3 routines
+— ``cblas_dgemm``, ``cblas_dsymm``, ``cblas_dsyrk``, ``cblas_dsyr2k``,
+``cblas_dtrmm``, ``cblas_dtrsm`` — with order/trans/side/uplo/diag
+enums, explicit leading dimensions, and in-place updates of the output
+buffer, all executed by a persistent :class:`~repro.api.BlasxContext`
+(the module default unless ``ctx=`` is given).
+
+Buffers may be
+
+* flat 1-D float64 arrays, interpreted through ``ld`` under the given
+  ``Order`` exactly as C callers lay them out, or
+* 2-D numpy arrays of the routine's logical shape (``ld`` is then
+  validated against the dense leading dimension).
+
+The output buffer (``C`` for gemm/symm/syrk/syr2k, ``B`` for
+trmm/trsm) must be float64 and writable — the routines update it in
+place and return ``None``, as legacy callers expect.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .context import BlasxContext, default_context
+
+# ------------------------------------------------------ CBLAS enum values
+CblasRowMajor = 101
+CblasColMajor = 102
+CblasNoTrans = 111
+CblasTrans = 112
+CblasConjTrans = 113   # == Trans for real matrices
+CblasUpper = 121
+CblasLower = 122
+CblasNonUnit = 131
+CblasUnit = 132
+CblasLeft = 141
+CblasRight = 142
+
+_TRANS = {CblasNoTrans: "N", CblasTrans: "T", CblasConjTrans: "T",
+          "N": "N", "T": "T", "C": "T", "n": "N", "t": "T", "c": "T"}
+_UPLO = {CblasUpper: "U", CblasLower: "L", "U": "U", "L": "L",
+         "u": "U", "l": "L"}
+_DIAG = {CblasNonUnit: "N", CblasUnit: "U", "N": "N", "U": "U",
+         "n": "N", "u": "U"}
+_SIDE = {CblasLeft: "L", CblasRight: "R", "L": "L", "R": "R",
+         "l": "L", "r": "R"}
+
+
+def _flag(table, value, what: str) -> str:
+    try:
+        return table[value]
+    except KeyError:
+        raise ValueError(f"invalid {what} flag: {value!r}") from None
+
+
+def _view(buf, rows: int, cols: int, ld: int, order: int, name: str,
+          writable: bool = False) -> np.ndarray:
+    """Logical ``rows x cols`` view of a CBLAS buffer.
+
+    Flat buffers follow the C convention: element (i, j) lives at
+    ``i*ld + j`` (row major) or ``i + j*ld`` (column major).  The
+    returned array is a *view* whenever numpy allows, which is what
+    makes the in-place output update visible to the caller.
+    """
+    if writable and not isinstance(buf, np.ndarray):
+        # np.asarray on a list would update a detached copy and the
+        # caller's buffer would silently keep its old contents
+        raise TypeError(f"{name}: output buffer must be a numpy array, "
+                        f"got {type(buf).__name__}")
+    a = np.asarray(buf)
+    if writable:
+        if a.dtype != np.float64:
+            raise TypeError(f"{name}: output buffer must be float64, "
+                            f"got {a.dtype}")
+        if not a.flags.writeable:
+            raise ValueError(f"{name}: output buffer is read-only")
+    elif a.dtype != np.float64:
+        a = a.astype(np.float64)
+    if a.ndim == 2:
+        if a.shape != (rows, cols):
+            raise ValueError(f"{name}: expected shape ({rows},{cols}), "
+                             f"got {a.shape}")
+        dense_ld = cols if order == CblasRowMajor else rows
+        if ld < dense_ld:
+            raise ValueError(f"{name}: ld {ld} < {dense_ld}")
+        return a
+    if a.ndim != 1:
+        raise ValueError(f"{name}: expected 1-D or 2-D buffer, "
+                         f"got {a.ndim}-D")
+    if order == CblasRowMajor:
+        if ld < max(1, cols):
+            raise ValueError(f"{name}: ld {ld} < n cols {cols}")
+        if a.size < rows * ld:
+            raise ValueError(f"{name}: buffer too small "
+                             f"({a.size} < {rows * ld})")
+        return a[:rows * ld].reshape(rows, ld)[:, :cols]
+    if order == CblasColMajor:
+        if ld < max(1, rows):
+            raise ValueError(f"{name}: ld {ld} < n rows {rows}")
+        if a.size < cols * ld:
+            raise ValueError(f"{name}: buffer too small "
+                             f"({a.size} < {cols * ld})")
+        return a[:cols * ld].reshape(cols, ld).T[:rows, :]
+    raise ValueError(f"invalid Order flag: {order!r}")
+
+
+def _ctx(ctx: Optional[BlasxContext]) -> BlasxContext:
+    return ctx if ctx is not None else default_context()
+
+
+# =========================================================== the routines
+def cblas_dgemm(order, transa, transb, m: int, n: int, k: int,
+                alpha: float, A, lda: int, B, ldb: int,
+                beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None) -> None:
+    """C := alpha*op(A)*op(B) + beta*C  (C is m x n, updated in place)."""
+    ta, tb = _flag(_TRANS, transa, "Trans"), _flag(_TRANS, transb, "Trans")
+    ar, ac = (m, k) if ta == "N" else (k, m)
+    br, bc = (k, n) if tb == "N" else (n, k)
+    Av = _view(A, ar, ac, lda, order, "A")
+    Bv = _view(B, br, bc, ldb, order, "B")
+    Cv = _view(C, m, n, ldc, order, "C", writable=True)
+    out = _ctx(ctx).gemm(Av, Bv, Cv if beta != 0.0 else None,
+                         alpha=alpha, beta=beta, transa=ta, transb=tb)
+    Cv[...] = out.array()
+
+
+def cblas_dsymm(order, side, uplo, m: int, n: int, alpha: float,
+                A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None) -> None:
+    """C := alpha*A*B + beta*C (Left) or alpha*B*A + beta*C (Right),
+    A symmetric with the ``uplo`` triangle stored."""
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A")
+    Bv = _view(B, m, n, ldb, order, "B")
+    Cv = _view(C, m, n, ldc, order, "C", writable=True)
+    out = _ctx(ctx).symm(Av, Bv, Cv if beta != 0.0 else None,
+                         alpha=alpha, beta=beta, side=sd, uplo=ul)
+    Cv[...] = out.array()
+
+
+def cblas_dsyrk(order, uplo, trans, n: int, k: int, alpha: float,
+                A, lda: int, beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None) -> None:
+    """C := alpha*op(A)*op(A)^T + beta*C on the ``uplo`` triangle."""
+    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
+    ar, ac = (n, k) if tr == "N" else (k, n)
+    Av = _view(A, ar, ac, lda, order, "A")
+    Cv = _view(C, n, n, ldc, order, "C", writable=True)
+    # BLAS syrk always reads C's uplo triangle (beta scales it), so seed
+    # the context call with Cv even for beta == 0 to preserve the
+    # untouched opposite triangle in the writeback.
+    out = _ctx(ctx).syrk(Av, Cv, alpha=alpha, beta=beta, uplo=ul, trans=tr)
+    Cv[...] = out.array()
+
+
+def cblas_dsyr2k(order, uplo, trans, n: int, k: int, alpha: float,
+                 A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
+                 ctx: Optional[BlasxContext] = None) -> None:
+    """C := alpha*op(A)*op(B)^T + alpha*op(B)*op(A)^T + beta*C."""
+    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
+    ar, ac = (n, k) if tr == "N" else (k, n)
+    Av = _view(A, ar, ac, lda, order, "A")
+    Bv = _view(B, ar, ac, ldb, order, "B")
+    Cv = _view(C, n, n, ldc, order, "C", writable=True)
+    out = _ctx(ctx).syr2k(Av, Bv, Cv, alpha=alpha, beta=beta,
+                          uplo=ul, trans=tr)
+    Cv[...] = out.array()
+
+
+def cblas_dtrmm(order, side, uplo, transa, diag, m: int, n: int,
+                alpha: float, A, lda: int, B, ldb: int, *,
+                ctx: Optional[BlasxContext] = None) -> None:
+    """B := alpha*op(tri(A))*B (Left) or alpha*B*op(tri(A)) (Right),
+    B (m x n) updated in place."""
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A")
+    Bv = _view(B, m, n, ldb, order, "B", writable=True)
+    out = _ctx(ctx).trmm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+                         transa=ta, diag=dg)
+    Bv[...] = out.array()
+
+
+def cblas_dtrsm(order, side, uplo, transa, diag, m: int, n: int,
+                alpha: float, A, lda: int, B, ldb: int, *,
+                ctx: Optional[BlasxContext] = None) -> None:
+    """Solve op(tri(A))*X = alpha*B (Left) or X*op(tri(A)) = alpha*B
+    (Right); X overwrites B (m x n) in place."""
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A")
+    Bv = _view(B, m, n, ldb, order, "B", writable=True)
+    out = _ctx(ctx).trsm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+                         transa=ta, diag=dg)
+    Bv[...] = out.array()

@@ -1,0 +1,610 @@
+"""`BlasxContext` — the persistent handle layer of the two-layer BLAS API.
+
+The paper's central claim is that a locality-aware runtime with a
+two-level tile cache (ALRU L1 per device + MESI-X L2 across peers)
+makes communication cost trivial.  That only holds if the caches
+*survive* between calls: a context owns one long-lived
+:class:`~repro.core.runtime.BlasxRuntime` and keeps its tile caches
+warm across routines, so chained workloads (Cholesky-style
+``syrk -> trsm -> gemm`` sweeps, LM serving layers calling ``gemm``
+per projection) stop re-paying H2D traffic on every call.
+
+Key objects
+-----------
+``BlasxContext``
+    cuBLAS-handle-style lifetime object.  All six L3 routines are
+    methods (``ctx.gemm`` ... ``ctx.trsm``); each returns a
+    :class:`MatrixHandle` that can be fed straight into the next call
+    without re-tiling.  Per-call ledger snapshots live in
+    ``ctx.calls``; cumulative counters in ``ctx.stats()``.
+``MatrixHandle``
+    A host matrix bound to a context under a globally unique
+    ``matrix_id``.  Tile keys derive from that id, so a handle's tiles
+    hit the warm ALRU/MESI-X caches on every subsequent call.  Handles
+    from different contexts never alias.
+``default_context()``
+    Module-cached context used by the legacy ``repro.core.blas3``
+    wrappers and the ``repro.api.cblas`` layer.
+
+Example
+-------
+>>> from repro.api import BlasxContext
+>>> with BlasxContext() as ctx:
+...     W = ctx.tile(weights)          # device-resident handle
+...     for x in batches:
+...         y = ctx.gemm(ctx.tile(x), W)   # W's tiles stay cached
+...         use(y.array())
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core import task as taskmod
+from ..core.runtime import BlasxRuntime, RuntimeConfig
+from ..core.tiling import TiledMatrix
+from .futures import BlasFuture, SerialExecutor
+
+DEFAULT_TILE = 256
+
+# ctx.calls keeps at most this many CallRecords (cumulative counters in
+# stats() are unaffected) so a long-lived default context stays bounded
+MAX_CALL_RECORDS = 512
+
+ArrayLike = Union[np.ndarray, "MatrixHandle"]
+
+# one global id stream so handles never alias across contexts either
+_MATRIX_IDS = itertools.count()
+
+
+def _as2d(x, name: str) -> np.ndarray:
+    a = np.asarray(x)
+    if a.ndim != 2:
+        raise ValueError(f"{name} must be 2-D, got shape {a.shape}")
+    return a
+
+
+class MatrixHandle:
+    """A tiled matrix registered with one :class:`BlasxContext`.
+
+    The handle pins a globally unique ``matrix_id`` so that tile keys
+    are stable across calls — the warm-cache contract.  The underlying
+    data stays host-resident (the paper's out-of-core model); device
+    copies of individual tiles live in the runtime's ALRU caches.
+
+    Mutating ``handle.array()`` in place after tiles have been cached
+    makes device copies stale; call :meth:`invalidate` afterwards.
+    """
+
+    def __init__(self, ctx: "BlasxContext", tiled: TiledMatrix):
+        self._ctx = ctx
+        self._tiled = tiled
+
+    @property
+    def matrix_id(self) -> str:
+        return self._tiled.matrix_id
+
+    @property
+    def shape(self):
+        return self._tiled.data.shape
+
+    @property
+    def tile(self) -> int:
+        return self._tiled.grid.tile
+
+    @property
+    def tiled(self) -> TiledMatrix:
+        return self._tiled
+
+    def array(self) -> np.ndarray:
+        """The host-resident data (no copy)."""
+        return self._tiled.data
+
+    def invalidate(self) -> int:
+        """Drop every cached device copy of this matrix's tiles.
+
+        Needed after in-place mutation of :meth:`array`.  Returns the
+        number of tiles dropped."""
+        return self._ctx._invalidate_matrix(self.matrix_id)
+
+    def __repr__(self) -> str:
+        return (f"MatrixHandle({self.matrix_id}, shape={self.shape}, "
+                f"tile={self.tile})")
+
+
+@dataclasses.dataclass(frozen=True)
+class CallRecord:
+    """Ledger snapshot of one routine executed by a context (deltas
+    against the runtime's cumulative counters)."""
+
+    index: int
+    routine: str
+    h2d_bytes: int
+    d2h_bytes: int
+    d2d_bytes: int
+    tasks: int
+    steals: int
+    l1_hits: int
+    l1_misses: int
+    makespan: float        # modeled seconds this call added (sim mode)
+
+    @property
+    def input_bytes(self) -> int:
+        return self.h2d_bytes + self.d2d_bytes
+
+
+class BlasxContext:
+    """Persistent two-level-cache BLAS handle (cuBLAS-handle analogue).
+
+    Parameters
+    ----------
+    config:
+        Any :class:`~repro.core.runtime.RuntimeConfig`; defaults to a
+        single simulated device.  Ignored when ``runtime`` is given.
+    runtime:
+        Adopt an existing :class:`BlasxRuntime` instead of building
+        one (used by the legacy wrappers' ``runtime=`` passthrough).
+    tile:
+        Default tile size for :meth:`tile` and auto-tiled numpy inputs.
+
+    The context is a context manager; :meth:`close` shuts down the
+    async executor and drops all cached tiles.  All methods are
+    thread-safe: calls serialize on one internal lock (the runtime is
+    not re-entrant), which is also what makes :meth:`submit` futures
+    well-ordered.
+    """
+
+    def __init__(self, config: Optional[RuntimeConfig] = None, *,
+                 runtime: Optional[BlasxRuntime] = None,
+                 tile: int = DEFAULT_TILE):
+        self._owns_runtime = runtime is None
+        self.runtime = runtime if runtime is not None else BlasxRuntime(
+            config or RuntimeConfig(n_devices=1, mode="sim"))
+        self.cfg = self.runtime.cfg
+        self.tile_size = tile
+        self.calls: List[CallRecord] = []   # last MAX_CALL_RECORDS only
+        self.n_calls = 0                    # lifetime count
+        self._lock = threading.RLock()
+        self._executor: Optional[SerialExecutor] = None
+        self._closed = False
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "BlasxContext":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Shut down the async executor and drop all cached tiles.
+        Idempotent; further routine calls raise ``RuntimeError``.
+
+        The executor is drained *outside* the context lock: in-flight
+        workers take that lock to run routines, so holding it through
+        ``shutdown(wait=True)`` would deadlock the closing thread."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown()
+        with self._lock:
+            # an adopted runtime (runtime= in the constructor) belongs
+            # to the caller — leave its caches and ledgers alone
+            if self._owns_runtime:
+                self.runtime.reset()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("BlasxContext is closed")
+
+    # ------------------------------------------------------------- handles
+    def tile(self, data, tile: Optional[int] = None) -> MatrixHandle:
+        """Register a host matrix and return its device-resident handle.
+
+        Tiles fetched during later calls stay in the runtime's L1/L2
+        caches keyed by this handle's unique ``matrix_id`` — reusing
+        the handle is what turns repeat traffic into cache hits."""
+        self._check_open()
+        if isinstance(data, MatrixHandle):
+            return self._adopt(data)
+        a = _as2d(data, "matrix")
+        mid = f"M{next(_MATRIX_IDS)}"
+        return MatrixHandle(self, TiledMatrix(mid, a, tile or self.tile_size))
+
+    def _adopt(self, h: MatrixHandle) -> MatrixHandle:
+        if h._ctx is not self:
+            raise ValueError(
+                f"handle {h.matrix_id} belongs to a different context; "
+                "tile caches do not transfer between contexts")
+        return h
+
+    def _coerce(self, x: ArrayLike, name: str, tile: Optional[int],
+                ephemeral: List["MatrixHandle"]) -> MatrixHandle:
+        """Handle passthrough; raw arrays are tiled fresh (cold) and
+        recorded in ``ephemeral`` — their matrix id is unique to this
+        one call, so any tiles they leave in the caches could never be
+        hit again and are dropped right after the run (keeps legacy
+        per-call traffic from squatting on cache capacity)."""
+        if isinstance(x, MatrixHandle):
+            if tile is not None and x.tile != tile:
+                raise ValueError(
+                    f"{name}: handle tile {x.tile} != requested tile {tile}")
+            return self._adopt(x)
+        a = _as2d(x, name)
+        h = self.tile(a, tile or self.tile_size)
+        ephemeral.append(h)
+        return h
+
+    def _fresh_out(self, rows: int, cols: int, tile: int, dtype,
+                   seed: Optional[np.ndarray] = None) -> MatrixHandle:
+        """New output matrix under a fresh id (seeded from C or zeros)."""
+        if seed is not None:
+            data = np.array(seed, dtype=dtype, copy=True)
+        else:
+            data = np.zeros((rows, cols), dtype=dtype)
+        mid = f"M{next(_MATRIX_IDS)}"
+        return MatrixHandle(self, TiledMatrix(mid, data, tile))
+
+    def _invalidate_matrix(self, matrix_id: str) -> int:
+        with self._lock:
+            n = 0
+            for dev in self.runtime.devices:
+                for key in dev.alru.keys():
+                    if key.matrix_id == matrix_id:
+                        self.runtime.directory.on_evict(key, dev.id)
+                        dev.alru.invalidate(key)
+                        dev.store.pop(key, None)
+                        n += 1
+            return n
+
+    # ------------------------------------------------------------ plumbing
+    def _run(self, routine: str, tasks, mats: Dict[str, TiledMatrix],
+             out_id: str,
+             ephemeral: Optional[List[MatrixHandle]] = None) -> CallRecord:
+        """Execute one taskized routine and append a ledger snapshot."""
+        rt = self.runtime
+        before_comm = rt.total_comm_bytes()
+        before = [(d.ledger.tasks, d.ledger.steals, d.alru.hits,
+                   d.alru.misses) for d in rt.devices]
+        t0 = rt.makespan()
+        rt.run(tasks, mats, out_id)
+        after_comm = rt.total_comm_bytes()
+        d_tasks = sum(d.ledger.tasks for d in rt.devices) - \
+            sum(b[0] for b in before)
+        d_steals = sum(d.ledger.steals for d in rt.devices) - \
+            sum(b[1] for b in before)
+        d_hits = sum(d.alru.hits for d in rt.devices) - \
+            sum(b[2] for b in before)
+        d_miss = sum(d.alru.misses for d in rt.devices) - \
+            sum(b[3] for b in before)
+        for h in ephemeral or ():
+            self._invalidate_matrix(h.matrix_id)
+        rec = CallRecord(
+            index=self.n_calls, routine=routine,
+            h2d_bytes=after_comm["h2d"] - before_comm["h2d"],
+            d2h_bytes=after_comm["d2h"] - before_comm["d2h"],
+            d2d_bytes=after_comm["d2d"] - before_comm["d2d"],
+            tasks=d_tasks, steals=d_steals,
+            l1_hits=d_hits, l1_misses=d_miss,
+            makespan=rt.makespan() - t0,
+        )
+        self.n_calls += 1
+        self.calls.append(rec)
+        if len(self.calls) > MAX_CALL_RECORDS:
+            del self.calls[0]
+        return rec
+
+    @property
+    def last_call(self) -> Optional[CallRecord]:
+        return self.calls[-1] if self.calls else None
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        """Cumulative session counters: total comm bytes, per-device
+        ledgers, call count, modeled makespan."""
+        rt = self.runtime
+        return {
+            "calls": self.n_calls,
+            "comm_bytes": rt.total_comm_bytes(),
+            "makespan": rt.makespan(),
+            "devices": rt.stats(),
+        }
+
+    def reset_stats(self) -> None:
+        """Zero every ledger/counter *without* dropping cached tiles —
+        session-boundary accounting for long-lived contexts."""
+        with self._lock:
+            self.runtime.reset_stats()
+            self.calls.clear()
+            self.n_calls = 0
+
+    def reset(self) -> None:
+        """Drop all cached tiles AND zero all counters (cold restart)."""
+        with self._lock:
+            self.runtime.reset()
+            self.calls.clear()
+            self.n_calls = 0
+
+    # ---------------------------------------------------------------- async
+    def submit(self, routine, *args, **kwargs) -> BlasFuture:
+        """Submit an L3 call for asynchronous execution.
+
+        ``routine`` is a routine name (``"gemm"`` ... ``"trsm"``,
+        ``"gemm_batched"``) or any callable.  Returns a
+        :class:`BlasFuture`; the result is whatever the synchronous
+        method returns (a :class:`MatrixHandle` for the six routines).
+        Submissions execute in order on a background thread, so
+        independent calls overlap with the caller and chained calls
+        may safely pass not-yet-materialized handles obtained from
+        ``future.result()``."""
+        if isinstance(routine, str):
+            fn = getattr(self, routine, None)
+            if fn is None or not callable(fn):
+                raise ValueError(f"unknown routine {routine!r}")
+        else:
+            fn = routine
+        # closed-check, lazy creation and enqueue all under the lock so a
+        # concurrent close() can neither leak a fresh executor nor null
+        # the one we are about to use
+        with self._lock:
+            self._check_open()
+            if self._executor is None:
+                self._executor = SerialExecutor(name="blasx-ctx")
+            return self._executor.submit(fn, *args, **kwargs)
+
+    # ======================================================== L3 routines
+    def gemm(self, A: ArrayLike, B: ArrayLike, C: Optional[ArrayLike] = None,
+             *, alpha: float = 1.0, beta: float = 0.0,
+             transa: str = "N", transb: str = "N",
+             tile: Optional[int] = None) -> MatrixHandle:
+        """C = alpha * op(A) @ op(B) + beta * C   (Eq. 1a)."""
+        self._check_open()
+        transa, transb = transa.upper()[0], transb.upper()[0]
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            Bh = self._coerce(B, "B", tile, eph)
+            self._check_tiles(Ah, Bh)
+            t = Ah.tile
+            m = Ah.shape[0] if transa == "N" else Ah.shape[1]
+            k = Ah.shape[1] if transa == "N" else Ah.shape[0]
+            kb = Bh.shape[0] if transb == "N" else Bh.shape[1]
+            n = Bh.shape[1] if transb == "N" else Bh.shape[0]
+            if k != kb:
+                raise ValueError(f"inner dims mismatch: {k} vs {kb}")
+            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
+            out = self._prep_c(C, (m, n), t, dtype, beta)
+            tasks = taskmod.taskize_gemm(Ah.tiled.grid, Bh.tiled.grid,
+                                         out.tiled.grid, transa, transb,
+                                         alpha, beta)
+            mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
+            self._run("gemm", tasks, mats, out.matrix_id, eph)
+            return out
+
+    def syrk(self, A: ArrayLike, C: Optional[ArrayLike] = None, *,
+             alpha: float = 1.0, beta: float = 0.0, uplo: str = "U",
+             trans: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+        """C = alpha * op(A) @ op(A)^T + beta * C, uplo triangle (Eq. 1b)."""
+        self._check_open()
+        trans = trans.upper()[0]
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            n = Ah.shape[0] if trans == "N" else Ah.shape[1]
+            out = self._prep_c(C, (n, n), Ah.tile, Ah.array().dtype, beta)
+            tasks = taskmod.taskize_syrk(Ah.tiled.grid, out.tiled.grid,
+                                         uplo, trans, alpha, beta)
+            mats = {h.matrix_id: h.tiled for h in (Ah, out)}
+            self._run("syrk", tasks, mats, out.matrix_id, eph)
+            return out
+
+    def syr2k(self, A: ArrayLike, B: ArrayLike,
+              C: Optional[ArrayLike] = None, *, alpha: float = 1.0,
+              beta: float = 0.0, uplo: str = "U", trans: str = "N",
+              tile: Optional[int] = None) -> MatrixHandle:
+        """C = alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C (Eq. 1e)."""
+        self._check_open()
+        trans = trans.upper()[0]
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            Bh = self._coerce(B, "B", tile, eph)
+            self._check_tiles(Ah, Bh)
+            n = Ah.shape[0] if trans == "N" else Ah.shape[1]
+            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
+            out = self._prep_c(C, (n, n), Ah.tile, dtype, beta)
+            tasks = taskmod.taskize_syr2k(Ah.tiled.grid, Bh.tiled.grid,
+                                          out.tiled.grid, uplo, trans,
+                                          alpha, beta)
+            mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
+            self._run("syr2k", tasks, mats, out.matrix_id, eph)
+            return out
+
+    def symm(self, A: ArrayLike, B: ArrayLike,
+             C: Optional[ArrayLike] = None, *, alpha: float = 1.0,
+             beta: float = 0.0, side: str = "L", uplo: str = "U",
+             tile: Optional[int] = None) -> MatrixHandle:
+        """C = alpha * sym(A) @ B + beta * C (side='L'; Eq. 1f).
+
+        ``side='R'`` reduces to the left-side tile algorithm via the
+        §III-C transpose identity; it operates on transposed host
+        copies, so cache reuse applies within — not across — the call.
+        """
+        self._check_open()
+        side = side.upper()[0]
+        if side == "R":
+            # C = alpha*B*A + beta*C  ==  (alpha*A*B^T + beta*C^T)^T
+            Bt = np.ascontiguousarray(_array_of(B).T)
+            Ct = None if C is None else \
+                np.ascontiguousarray(_as2d(_array_of(C), "C").T)
+            out = self.symm(_array_of(A), Bt, Ct, alpha=alpha, beta=beta,
+                            side="L", uplo=uplo, tile=tile)
+            return self._transposed_result(out)
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            Bh = self._coerce(B, "B", tile, eph)
+            self._check_tiles(Ah, Bh)
+            m, n = Bh.shape
+            if Ah.shape != (m, m):
+                raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
+            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
+            out = self._prep_c(C, (m, n), Ah.tile, dtype, beta)
+            tasks = taskmod.taskize_symm(Ah.tiled.grid, Bh.tiled.grid,
+                                         out.tiled.grid, uplo, alpha, beta)
+            mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
+            self._run("symm", tasks, mats, out.matrix_id, eph)
+            return out
+
+    def trmm(self, A: ArrayLike, B: ArrayLike, *, alpha: float = 1.0,
+             side: str = "L", uplo: str = "U", transa: str = "N",
+             diag: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+        """B := alpha * op(tri(A)) @ B (side='L'; Eq. 1d), returned as a
+        new handle (functional, B is not overwritten)."""
+        self._check_open()
+        side = side.upper()[0]
+        if side == "R":
+            # B*op(A) == (op(A)^T B^T)^T — §III-C at matrix granularity
+            flip = "T" if transa.upper()[0] == "N" else "N"
+            out = self.trmm(_array_of(A),
+                            np.ascontiguousarray(_array_of(B).T),
+                            alpha=alpha, side="L", uplo=uplo, transa=flip,
+                            diag=diag, tile=tile)
+            return self._transposed_result(out)
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            Bh = self._coerce(B, "B", tile, eph)
+            self._check_tiles(Ah, Bh)
+            m, n = Bh.shape
+            if Ah.shape != (m, m):
+                raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
+            # legacy semantics: TRMM's result keeps B's dtype
+            out = self._fresh_out(m, n, Ah.tile, Bh.array().dtype)
+            # B's tiles are the taskization's Cin inputs: a reused handle
+            # serves them straight from the warm cache.
+            tasks = taskmod.taskize_trmm(Ah.tiled.grid, Bh.tiled.grid,
+                                         out.tiled.grid, uplo, transa,
+                                         diag, alpha)
+            mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
+            self._run("trmm", tasks, mats, out.matrix_id, eph)
+            return out
+
+    def trsm(self, A: ArrayLike, B: ArrayLike, *, alpha: float = 1.0,
+             side: str = "L", uplo: str = "U", transa: str = "N",
+             diag: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+        """Solve op(tri(A)) @ X = alpha * B (side='L'; Eq. 1c); returns X."""
+        self._check_open()
+        side = side.upper()[0]
+        if side == "R":
+            # X*op(A) = alpha*B  ==  op(A)^T X^T = alpha B^T
+            flip = "T" if transa.upper()[0] == "N" else "N"
+            out = self.trsm(_array_of(A),
+                            np.ascontiguousarray(_array_of(B).T),
+                            alpha=alpha, side="L", uplo=uplo, transa=flip,
+                            diag=diag, tile=tile)
+            return self._transposed_result(out)
+        with self._lock:
+            eph: List[MatrixHandle] = []
+            Ah = self._coerce(A, "A", tile, eph)
+            Bh = self._coerce(B, "B", tile, eph)
+            self._check_tiles(Ah, Bh)
+            m, n = Bh.shape
+            if Ah.shape != (m, m):
+                raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
+            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
+            out = self._fresh_out(m, n, Ah.tile, dtype)
+            tasks = taskmod.taskize_trsm(Ah.tiled.grid, Bh.tiled.grid,
+                                         out.tiled.grid, uplo, transa,
+                                         diag, alpha)
+            mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
+            self._run("trsm", tasks, mats, out.matrix_id, eph)
+            return out
+
+    # --------------------------------------------------------- batched API
+    def gemm_batched(self, As: Sequence[ArrayLike], Bs: Sequence[ArrayLike],
+                     Cs: Optional[Sequence[ArrayLike]] = None, *,
+                     alpha: float = 1.0, beta: float = 0.0,
+                     transa: str = "N", transb: str = "N",
+                     tile: Optional[int] = None) -> List[MatrixHandle]:
+        """Pointer-array style batch (cublasDgemmBatched analogue)."""
+        from .batch import gemm_batched
+        return gemm_batched(self, As, Bs, Cs, alpha=alpha, beta=beta,
+                            transa=transa, transb=transb, tile=tile)
+
+    def gemm_strided_batched(self, A, B, C=None, *, alpha: float = 1.0,
+                             beta: float = 0.0, transa: str = "N",
+                             transb: str = "N",
+                             tile: Optional[int] = None) -> np.ndarray:
+        """3-D strided batch (cublasDgemmStridedBatched analogue)."""
+        from .batch import gemm_strided_batched
+        return gemm_strided_batched(self, A, B, C, alpha=alpha, beta=beta,
+                                    transa=transa, transb=transb, tile=tile)
+
+    # ------------------------------------------------------------- helpers
+    @staticmethod
+    def _check_tiles(*handles: "MatrixHandle") -> None:
+        tiles = {h.tile for h in handles}
+        if len(tiles) > 1:
+            names = ", ".join(f"{h.matrix_id}={h.tile}" for h in handles)
+            raise ValueError(f"tile mismatch: {names}")
+
+    def _transposed_result(self, out: MatrixHandle) -> MatrixHandle:
+        """§III-C side='R' epilogue: re-tile the transposed result and
+        drop the intermediate handle's cached tiles — the caller never
+        sees it, so they could only ever be dead weight."""
+        res = self.tile(np.ascontiguousarray(out.array().T), out.tile)
+        out.invalidate()
+        return res
+
+    def _prep_c(self, C: Optional[ArrayLike], shape, tile: int, dtype,
+                beta: float) -> MatrixHandle:
+        if C is None:
+            if beta != 0.0:
+                raise ValueError("beta != 0 requires C")
+            return self._fresh_out(shape[0], shape[1], tile, dtype)
+        c = _as2d(_array_of(C), "C")
+        if c.shape != shape:
+            raise ValueError(f"C shape {c.shape} != {shape}")
+        # legacy semantics: the output keeps C's dtype (the runtime
+        # downcasts each written tile via astype)
+        return self._fresh_out(shape[0], shape[1], tile, c.dtype, seed=c)
+
+
+def _array_of(x: ArrayLike) -> np.ndarray:
+    return x.array() if isinstance(x, MatrixHandle) else np.asarray(x)
+
+
+# ---------------------------------------------------------- default context
+_default_ctx: Optional[BlasxContext] = None
+_default_lock = threading.Lock()
+
+
+def default_context() -> BlasxContext:
+    """The module-cached context backing the legacy ``blas3`` functions
+    and the ``cblas_*`` layer (created on first use, kept warm)."""
+    global _default_ctx
+    with _default_lock:
+        if _default_ctx is None or _default_ctx.closed:
+            _default_ctx = BlasxContext(
+                RuntimeConfig(n_devices=1, mode="sim"))
+        return _default_ctx
+
+
+def set_default_context(ctx: Optional[BlasxContext]) -> Optional[BlasxContext]:
+    """Swap the process-wide default context; returns the previous one
+    (not closed — the caller decides its fate)."""
+    global _default_ctx
+    with _default_lock:
+        prev, _default_ctx = _default_ctx, ctx
+        return prev

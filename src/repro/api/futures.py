@@ -1,0 +1,68 @@
+"""Asynchronous submission primitives for the context API.
+
+The runtime is not re-entrant (one scheduling pass owns the devices),
+so a context serializes submissions onto a single background worker —
+the host-side analogue of enqueueing kernels on a stream: ``submit``
+returns immediately, work proceeds in order, and the caller overlaps
+its own work until it blocks on ``BlasFuture.result()``.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+from typing import Any, Callable, Optional
+
+
+class BlasFuture:
+    """Handle to an in-flight L3 routine (cudaEvent/cudaStream flavour).
+
+    Thin, deliberately minimal wrapper over
+    :class:`concurrent.futures.Future`: ``result()`` blocks (and
+    re-raises the routine's exception, if any), ``done()`` never
+    blocks, ``exception()`` reports without raising.
+    """
+
+    def __init__(self, fut: "concurrent.futures.Future[Any]"):
+        self._fut = fut
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until the routine finishes; returns its value (a
+        ``MatrixHandle`` for the six L3 routines)."""
+        return self._fut.result(timeout)
+
+    def done(self) -> bool:
+        """Non-blocking completion probe."""
+        return self._fut.done()
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._fut.exception(timeout)
+
+    def add_done_callback(self, fn: Callable[["BlasFuture"], None]) -> None:
+        self._fut.add_done_callback(lambda _f: fn(self))
+
+    def __repr__(self) -> str:
+        state = "done" if self.done() else "pending"
+        return f"BlasFuture({state})"
+
+
+class SerialExecutor:
+    """One daemon worker draining submissions in FIFO order."""
+
+    def __init__(self, name: str = "blasx"):
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=name)
+        self._lock = threading.Lock()
+        self._open = True
+
+    def submit(self, fn: Callable[..., Any], *args, **kwargs) -> BlasFuture:
+        with self._lock:
+            if not self._open:
+                raise RuntimeError("executor is shut down")
+            return BlasFuture(self._pool.submit(fn, *args, **kwargs))
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if not self._open:
+                return
+            self._open = False
+        self._pool.shutdown(wait=wait)

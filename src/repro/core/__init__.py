@@ -1,14 +1,32 @@
 """repro.core — the BLASX reproduction: tile algebra, two-level tile
 caches (ALRU + MESI-X), the locality-aware dynamic scheduling runtime,
-and the public L3 BLAS API."""
+and the legacy numpy-in/numpy-out L3 BLAS API.
+
+The persistent-handle layer (``BlasxContext``, ``MatrixHandle``,
+``BlasFuture``, ``cblas_*``) lives in ``repro.api``; the names are
+re-exported here lazily so ``repro.core`` keeps no import-time
+dependency on the api package (which itself imports core modules).
+"""
 from .blas3 import (gemm, ref_gemm, ref_symm, ref_syr2k, ref_syrk, ref_trmm,
                     ref_trsm, symm, syr2k, syrk, trmm, trsm)
 from .runtime import BlasxRuntime, RuntimeConfig
 from .tiling import TiledMatrix, TileGrid, TileKey, degree_of_parallelism
+
+_API_NAMES = ("BlasxContext", "MatrixHandle", "BlasFuture",
+              "default_context", "set_default_context")
 
 __all__ = [
     "gemm", "syrk", "syr2k", "symm", "trmm", "trsm",
     "ref_gemm", "ref_syrk", "ref_syr2k", "ref_symm", "ref_trmm", "ref_trsm",
     "BlasxRuntime", "RuntimeConfig",
     "TiledMatrix", "TileGrid", "TileKey", "degree_of_parallelism",
+    *_API_NAMES,
 ]
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from .. import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

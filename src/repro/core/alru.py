@@ -43,10 +43,16 @@ class Alru:
         self._front: Optional[LRUBlock] = None  # most recently used
         self._back: Optional[LRUBlock] = None   # least recently used
         self._lock = threading.RLock()
-        # instrumentation
+        # instrumentation — cumulative across every run of a session
+        # (a persistent context reuses one ALRU for many calls); the
+        # lifetime_* counters survive reset_stats() so cross-call
+        # eviction pressure stays observable.
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.lifetime_hits = 0
+        self.lifetime_misses = 0
+        self.lifetime_evictions = 0
 
     # ------------------------------------------------------------- queries
     def __contains__(self, key: TileKey) -> bool:
@@ -81,12 +87,14 @@ class Alru:
             block = self._map.get(key)
             if block is not None:  # cache hit
                 self.hits += 1
+                self.lifetime_hits += 1
                 self._unlink(block)
                 self._push_front(block)
                 block.reader += 1
                 return block
             # miss: allocate, evicting as needed
             self.misses += 1
+            self.lifetime_misses += 1
             gpu_addr = self.heap.malloc(nbytes)
             while gpu_addr is None:
                 victim = self._dequeue()
@@ -123,6 +131,14 @@ class Alru:
             self.heap.free(block.gpu_addr)
             return True
 
+    def reset_stats(self) -> None:
+        """Zero the per-session counters at a call/session boundary
+        without touching resident blocks; lifetime_* keep counting."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+
     # ---------------------------------------------------------- internals
     def _dequeue(self) -> Optional[LRUBlock]:
         """Alg. 2 ``Dequeue``: walk from the LRU end toward the front and
@@ -133,6 +149,7 @@ class Alru:
                 self._unlink(block)
                 del self._map[block.host_addr]
                 self.evictions += 1
+                self.lifetime_evictions += 1
                 if self.on_evict is not None:
                     self.on_evict(self.device_id, block.host_addr)
                 return block

@@ -1,199 +1,110 @@
-"""Public level-3 BLAS API (paper §III/§IV) — backward compatible, tiled,
-executed by the BLASX runtime.
+"""Legacy numpy-in/numpy-out level-3 BLAS API (paper §III/§IV).
 
-All six L3 routines are provided with numpy-array in/out semantics so
-legacy BLAS callers can switch by changing an import (the paper's
-"backward compatibility" goal).  ``side='R'`` cases are reduced to the
-native left-side tile algorithms via the transpose identities
-(op(A)^T X^T = alpha B^T), mirroring the paper's §III-C trick at matrix
-granularity.
+This is the compatibility surface of the two-layer API design: each of
+the six L3 routines is a thin wrapper over a persistent
+``repro.api.BlasxContext``.  By default calls go through one
+module-cached context (``repro.api.default_context()``), so the
+runtime and its ALRU/MESI-X tile caches are built once per process —
+not per call.  ``config=`` runs a call on a fresh, private runtime;
+``runtime=`` adopts an existing one (ledgers accumulate on it).
 
-Every routine also has a ``ref_*`` oracle (pure numpy) used by the test
-suite and benchmarks.
+``side='R'`` cases reduce to the native left-side tile algorithms via
+the transpose identities (op(A)^T X^T = alpha B^T), mirroring the
+paper's §III-C trick at matrix granularity — the reduction happens
+inside the context methods.
+
+Every routine also has a ``ref_*`` oracle (pure numpy) used by the
+test suite and benchmarks.  For handle-based chaining, async
+submission and the CBLAS layer, use ``repro.api`` directly.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
 from . import task as taskmod
 from .runtime import BlasxRuntime, RuntimeConfig
-from .tiling import TiledMatrix
 
 DEFAULT_TILE = 256
 
 
-def _as2d(x, name):
-    a = np.asarray(x)
-    if a.ndim != 2:
-        raise ValueError(f"{name} must be 2-D, got shape {a.shape}")
-    return a
+def _finish(out) -> np.ndarray:
+    """Extract the result array and drop the discarded output handle's
+    cached tiles (TRSM/TRMM chains cache output tiles as step inputs;
+    legacy callers never reuse the handle, so they'd be dead weight)."""
+    data = out.array()
+    out.invalidate()
+    return data
 
 
-def _runtime(config: Optional[RuntimeConfig]) -> BlasxRuntime:
-    return BlasxRuntime(config or RuntimeConfig(n_devices=1, mode="sim"))
+def _context(config: Optional[RuntimeConfig],
+             runtime: Optional[BlasxRuntime]):
+    """Resolve the executing context for one legacy call.
 
+    Imported lazily: ``repro.api`` depends on ``repro.core`` modules,
+    so the dependency must point api -> core at import time."""
+    from ..api.context import BlasxContext, default_context
 
-def _grids(mats: Dict[str, TiledMatrix]):
-    return {k: m.grid for k, m in mats.items()}
+    if runtime is not None:
+        return BlasxContext(runtime=runtime)
+    if config is not None:
+        return BlasxContext(config)
+    return default_context()
 
 
 # ============================================================== GEMM (1a)
 def gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    A, B = _as2d(A, "A"), _as2d(B, "B")
-    transa, transb = transa.upper()[0], transb.upper()[0]
-    m = A.shape[0] if transa == "N" else A.shape[1]
-    k = A.shape[1] if transa == "N" else A.shape[0]
-    kb = B.shape[0] if transb == "N" else B.shape[1]
-    n = B.shape[1] if transb == "N" else B.shape[0]
-    if k != kb:
-        raise ValueError(f"inner dims mismatch: {k} vs {kb}")
-    if C is None:
-        if beta != 0.0:
-            raise ValueError("beta != 0 requires C")
-        C = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
-    C = np.array(_as2d(C, "C"), copy=True)
-    if C.shape != (m, n):
-        raise ValueError(f"C shape {C.shape} != ({m},{n})")
-
-    mats = {
-        "A": TiledMatrix("A", A, tile),
-        "B": TiledMatrix("B", B, tile),
-        "C": TiledMatrix("C", C, tile),
-    }
-    tasks = taskmod.taskize_gemm(mats["A"].grid, mats["B"].grid,
-                                 mats["C"].grid, transa, transb, alpha, beta)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.gemm(A, B, C, alpha=alpha, beta=beta,
+                            transa=transa, transb=transb, tile=tile))
 
 
 # ============================================================== SYRK (1b)
 def syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    A = _as2d(A, "A")
-    trans = trans.upper()[0]
-    n = A.shape[0] if trans == "N" else A.shape[1]
-    if C is None:
-        if beta != 0.0:
-            raise ValueError("beta != 0 requires C")
-        C = np.zeros((n, n), dtype=A.dtype)
-    C = np.array(_as2d(C, "C"), copy=True)
-    mats = {"A": TiledMatrix("A", A, tile), "C": TiledMatrix("C", C, tile)}
-    tasks = taskmod.taskize_syrk(mats["A"].grid, mats["C"].grid,
-                                 uplo, trans, alpha, beta)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.syrk(A, C, alpha=alpha, beta=beta, uplo=uplo,
+                            trans=trans, tile=tile))
 
 
 # ============================================================= SYR2K (1e)
 def syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
           tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
           runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    A, B = _as2d(A, "A"), _as2d(B, "B")
-    trans = trans.upper()[0]
-    n = A.shape[0] if trans == "N" else A.shape[1]
-    if C is None:
-        if beta != 0.0:
-            raise ValueError("beta != 0 requires C")
-        C = np.zeros((n, n), dtype=np.promote_types(A.dtype, B.dtype))
-    C = np.array(_as2d(C, "C"), copy=True)
-    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
-            "C": TiledMatrix("C", C, tile)}
-    tasks = taskmod.taskize_syr2k(mats["A"].grid, mats["B"].grid,
-                                  mats["C"].grid, uplo, trans, alpha, beta)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.syr2k(A, B, C, alpha=alpha, beta=beta, uplo=uplo,
+                             trans=trans, tile=tile))
 
 
 # ============================================================== SYMM (1f)
 def symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    side = side.upper()[0]
-    A, B = _as2d(A, "A"), _as2d(B, "B")
-    if side == "R":
-        # C = alpha*B*A + beta*C  ==  (alpha*A*B^T + beta*C^T)^T
-        Ct = None if C is None else np.ascontiguousarray(_as2d(C, "C").T)
-        out = symm(A, np.ascontiguousarray(B.T), Ct, alpha=alpha, beta=beta,
-                   side="L", uplo=uplo, tile=tile, config=config,
-                   runtime=runtime)
-        return np.ascontiguousarray(out.T)
-    m, n = B.shape
-    if A.shape != (m, m):
-        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
-    if C is None:
-        if beta != 0.0:
-            raise ValueError("beta != 0 requires C")
-        C = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
-    C = np.array(_as2d(C, "C"), copy=True)
-    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
-            "C": TiledMatrix("C", C, tile)}
-    tasks = taskmod.taskize_symm(mats["A"].grid, mats["B"].grid,
-                                 mats["C"].grid, uplo, alpha, beta)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.symm(A, B, C, alpha=alpha, beta=beta, side=side,
+                            uplo=uplo, tile=tile))
 
 
 # ============================================================== TRMM (1d)
 def trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    side = side.upper()[0]
-    A, B = _as2d(A, "A"), _as2d(B, "B")
-    if side == "R":
-        # B := alpha * B * op(A)  ==  (alpha * op(A)^T * B^T)^T
-        flip = "T" if transa.upper()[0] == "N" else "N"
-        out = trmm(A, np.ascontiguousarray(B.T), alpha=alpha, side="L",
-                   uplo=uplo, transa=flip, diag=diag, tile=tile,
-                   config=config, runtime=runtime)
-        return np.ascontiguousarray(out.T)
-    m, n = B.shape
-    if A.shape != (m, m):
-        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
-    cin = np.array(B, copy=True)   # snapshot: tasks read Cin, write C
-    cout = np.zeros_like(cin)
-    mats = {"A": TiledMatrix("A", A, tile),
-            "Cin": TiledMatrix("Cin", cin, tile),
-            "C": TiledMatrix("C", cout, tile)}
-    tasks = taskmod.taskize_trmm(mats["A"].grid, mats["Cin"].grid,
-                                 mats["C"].grid, uplo, transa, diag, alpha)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.trmm(A, B, alpha=alpha, side=side, uplo=uplo,
+                            transa=transa, diag=diag, tile=tile))
 
 
 # ============================================================== TRSM (1c)
 def trsm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    side = side.upper()[0]
-    A, B = _as2d(A, "A"), _as2d(B, "B")
-    if side == "R":
-        # solve X*op(A) = alpha*B  ==  op(A)^T X^T = alpha B^T
-        flip = "T" if transa.upper()[0] == "N" else "N"
-        out = trsm(A, np.ascontiguousarray(B.T), alpha=alpha, side="L",
-                   uplo=uplo, transa=flip, diag=diag, tile=tile,
-                   config=config, runtime=runtime)
-        return np.ascontiguousarray(out.T)
-    m, n = B.shape
-    if A.shape != (m, m):
-        raise ValueError(f"A must be ({m},{m}), got {A.shape}")
-    x = np.zeros((m, n), dtype=np.promote_types(A.dtype, B.dtype))
-    mats = {"A": TiledMatrix("A", A, tile), "B": TiledMatrix("B", B, tile),
-            "C": TiledMatrix("C", x, tile)}
-    tasks = taskmod.taskize_trsm(mats["A"].grid, mats["B"].grid,
-                                 mats["C"].grid, uplo, transa, diag, alpha)
-    rt = runtime or _runtime(config)
-    rt.run(tasks, mats, "C")
-    return mats["C"].data
+    ctx = _context(config, runtime)
+    return _finish(ctx.trsm(A, B, alpha=alpha, side=side, uplo=uplo,
+                            transa=transa, diag=diag, tile=tile))
 
 
 # ==================================================== paper-scale shadows
@@ -261,16 +172,23 @@ def _tri(A, uplo, diag):
     return t
 
 
-def ref_syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
-    full = alpha * (A @ A.T if trans.upper()[0] == "N" else A.T @ A)
+def _uplo_update(full, C, beta, uplo):
+    """BLAS triangle semantics shared by SYRK/SYR2K: write
+    ``full + beta*C`` into the ``uplo`` triangle, keep the original C
+    (or zeros) elsewhere."""
     n = full.shape[0]
     base = np.zeros((n, n), full.dtype) if C is None else beta * np.asarray(C)
-    out = np.array(np.zeros((n, n), full.dtype) if C is None else np.asarray(C),
-                   dtype=full.dtype, copy=True)
+    out = np.array(np.zeros((n, n), full.dtype) if C is None
+                   else np.asarray(C), dtype=full.dtype, copy=True)
     mask = np.triu(np.ones((n, n), bool)) if uplo.upper()[0] == "U" \
         else np.tril(np.ones((n, n), bool))
     out[mask] = (full + base)[mask]
     return out
+
+
+def ref_syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
+    full = alpha * (A @ A.T if trans.upper()[0] == "N" else A.T @ A)
+    return _uplo_update(full, C, beta, uplo)
 
 
 def ref_syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
@@ -278,14 +196,7 @@ def ref_syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N"):
         full = alpha * (A @ B.T) + alpha * (B @ A.T)
     else:
         full = alpha * (A.T @ B) + alpha * (B.T @ A)
-    n = full.shape[0]
-    base = np.zeros((n, n), full.dtype) if C is None else beta * np.asarray(C)
-    out = np.array(np.zeros((n, n), full.dtype) if C is None else np.asarray(C),
-                   dtype=full.dtype, copy=True)
-    mask = np.triu(np.ones((n, n), bool)) if uplo.upper()[0] == "U" \
-        else np.tril(np.ones((n, n), bool))
-    out[mask] = (full + base)[mask]
-    return out
+    return _uplo_update(full, C, beta, uplo)
 
 
 def ref_symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U"):

@@ -52,7 +52,9 @@ def ring_allgather_matmul(x_local: jax.Array, w_local: jax.Array,
     device matmuls the panel it currently holds — panel k+1 is in
     flight (ppermute) while panel k multiplies.
     """
-    d = lax.axis_size(axis_name)
+    # psum of a literal folds to a static int on every jax version;
+    # lax.axis_size only exists on newer releases
+    d = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     m_local, _ = x_local.shape
     n_local = w_local.shape[1]
@@ -82,7 +84,9 @@ def ring_reduce_scatter_matmul(x_local: jax.Array, w_local: jax.Array,
     matmul.  The matmul is deliberately blocked by row so only one
     block is computed per ring step (BLASX's k-step interleaving).
     """
-    d = lax.axis_size(axis_name)
+    # psum of a literal folds to a static int on every jax version;
+    # lax.axis_size only exists on newer releases
+    d = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     m = x_local.shape[0]
     if m % d != 0:

@@ -170,7 +170,19 @@ class DeviceSim:
 
 
 class BlasxRuntime:
-    """Executes a taskized L3 BLAS call over simulated devices (Alg. 1)."""
+    """Executes taskized L3 BLAS calls over simulated devices (Alg. 1).
+
+    A runtime is a *session*: ``run`` may be called any number of
+    times and the tile caches (ALRU L1 + MESI-X L2), device clocks and
+    communication ledgers persist across calls — tiles cached by one
+    routine are served warm to the next, provided callers keep tile
+    keys stable (unique matrix ids per matrix; see
+    ``repro.api.BlasxContext``).  Ledgers accumulate; callers wanting
+    per-call numbers snapshot around ``run`` (``CallRecord`` in the
+    context layer does this).  ``reset()`` returns the session to a
+    cold state, ``reset_stats()`` zeroes counters but keeps caches
+    warm.
+    """
 
     def __init__(self, cfg: RuntimeConfig):
         self.cfg = cfg
@@ -179,12 +191,16 @@ class BlasxRuntime:
                         for d in range(cfg.n_devices)]
         self._matmul = MATMULS[cfg.kernel]
         self._solver = get_solver()
+        self.runs = 0
 
     # ------------------------------------------------------------- public
     def run(self, tasks: Sequence[Task], matrices: Dict[str, TiledMatrix],
             out_id: str) -> None:
         """Execute all tasks; the output matrix (``matrices[out_id]``) is
         updated in place tile by tile."""
+        self.runs += 1
+        if not tasks:
+            return
         self._matrices = matrices
         self._out_id = out_id
         if self.cfg.static_assignment:
@@ -486,6 +502,28 @@ class BlasxRuntime:
         if not self.cfg.execute:
             return _METADATA_ONLY, nbytes / self.cfg.h2d_bw_eff
         return materialize(mat.read_tile(key.i, key.j), ref), nbytes / self.cfg.h2d_bw_eff
+
+    # ----------------------------------------------------------- sessions
+    def reset(self) -> None:
+        """Cold restart: drop every cached tile, rebuild the coherence
+        directory, zero all ledgers and clocks.  The next ``run`` pays
+        full H2D traffic again."""
+        self.directory = MesixDirectory(self.cfg.n_devices,
+                                        self.cfg.p2p_groups)
+        self.devices = [DeviceSim(d, self.cfg, self.directory)
+                        for d in range(self.cfg.n_devices)]
+        self.runs = 0
+
+    def reset_stats(self) -> None:
+        """Zero ledgers and cache counters *without* evicting anything —
+        session-boundary accounting for long-lived runtimes.  Device
+        clocks are kept (they order the sim's virtual time); use the
+        deltas of :meth:`makespan` across calls."""
+        for d in self.devices:
+            d.ledger = Ledger()
+            d.alru.reset_stats()
+        self.directory.writebacks = 0
+        self.directory.invalidations = 0
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Dict[str, float]]:

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 ACTIVATIONS = {
     None: lambda x: x,
     "none": lambda x: x,
@@ -103,7 +105,7 @@ def matmul_pallas(a: jax.Array, b: jax.Array, bias: Optional[jax.Array],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

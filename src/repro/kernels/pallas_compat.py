@@ -1,0 +1,12 @@
+"""Version shims for the jax pallas TPU surface shared by the kernels.
+
+Newer jax releases renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; resolve whichever exists once, here, so the
+kernels stay importable across versions.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -11,6 +11,8 @@ from repro.configs import ARCH_IDS, SHAPES, all_configs, cell_supported, \
     get_config
 from repro.models import Model
 
+pytestmark = pytest.mark.slow  # full per-arch sweeps dominate suite time
+
 KEY = jax.random.PRNGKey(0)
 ARCHS = [a for a in ARCH_IDS if a != "blasx_gemm"]
 

@@ -2,7 +2,11 @@
 integrity, ALRU pinning discipline, MESI-X single-writer consistency,
 taskization flop accounting, tiled-GEMM correctness over random shapes."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import gemm, ref_gemm
 from repro.core.alru import Alru

@@ -154,6 +154,7 @@ def test_train_loop_loss_decreases(tmp_path):
     assert out["last_loss"] < out["first_loss"]  # learnable synthetic data
 
 
+@pytest.mark.slow
 def test_train_resume_from_checkpoint(tmp_path):
     from repro.launch.train import TrainConfig, run
     ck = str(tmp_path / "ck")
