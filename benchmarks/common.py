@@ -24,6 +24,7 @@ def gflops(flops: float, seconds: float) -> float:
 def rows_to_csv(rows: List[Dict]) -> str:
     out = []
     for r in rows:
+        r = dict(r)  # rows are reused for the JSON report; don't mutate
         name = r.pop("name")
         us = r.pop("us_per_call", "")
         derived = ";".join(f"{k}={v}" for k, v in r.items())

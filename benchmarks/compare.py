@@ -1,0 +1,184 @@
+"""Bench regression gate: compare a BENCH_*.json report to the
+committed baseline.
+
+Usage (the CI bench-smoke lane)::
+
+    python -m benchmarks.run --quick --json BENCH_pr.json
+    python benchmarks/compare.py --baseline benchmarks/baseline.json \
+        BENCH_pr.json
+
+Two classes of checks:
+
+* **Invariants** — absolute properties of the PR report that must hold
+  on any machine: the batched JaxBackend beats the per-step
+  NumpyBackend wall-clock on the quick GEMM benchmark, and issues
+  strictly fewer kernel launches than scheduled tile tasks.
+* **Regressions vs baseline** — metrics compared against
+  ``benchmarks/baseline.json`` with a tolerance (default 20%; CI
+  passes 35%): the jax-vs-numpy speedup ratio and the deterministic
+  kernel-launch/launches-saved counts.  The speedup is a within-run
+  ratio so absolute host speed cancels, but the OpenBLAS-vs-XLA
+  *relative* speed still varies by host and carries ~15% run-to-run
+  noise — hence the widened CI tolerance and a committed baseline
+  taken from the conservative end of several runs; the invariant
+  above is the hard floor.  Raw GFLOP/s are *recorded* in the report
+  for the trajectory but not gated by default — the committed
+  baseline and the CI runner are different machines
+  (``--gate-gflops`` opts in when comparing like-for-like hosts).
+
+Exits non-zero with a line per violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def _rows_by_name(report: dict) -> Dict[str, dict]:
+    out: Dict[str, dict] = {}
+    for rows in report.get("results", {}).values():
+        for row in rows:
+            out[row["name"]] = row
+    return out
+
+
+def _num(row: dict, key: str):
+    try:
+        return float(row[key])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+class Gate:
+    def __init__(self):
+        self.failures: List[str] = []
+        self.notes: List[str] = []
+
+    def fail(self, msg: str) -> None:
+        self.failures.append(msg)
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+    def check_ratio(self, name: str, metric: str, pr, base, tol: float,
+                    higher_is_better: bool) -> None:
+        if pr is None or base is None:
+            self.fail(f"{name}: metric {metric!r} missing "
+                      f"(pr={pr}, baseline={base})")
+            return
+        if base == 0:
+            self.note(f"{name}.{metric}: baseline is 0, skipping ratio")
+            return
+        ratio = pr / base
+        ok = ratio >= (1 - tol) if higher_is_better else ratio <= (1 + tol)
+        arrow = "↑" if higher_is_better else "↓"
+        line = (f"{name}.{metric} ({arrow} better): pr={pr:g} "
+                f"baseline={base:g} ratio={ratio:.3f} tol={tol:.0%}")
+        if ok:
+            self.note("OK   " + line)
+        else:
+            self.fail("FAIL " + line)
+
+
+def check_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
+    summary = pr_rows.get("backends/summary")
+    if summary is None:
+        gate.fail("backends/summary row missing from PR report")
+        return
+    if _num(summary, "jax_beats_numpy") != 1:
+        gate.fail(
+            "invariant: batched JaxBackend must beat NumpyBackend "
+            f"wall-clock on the quick GEMM benchmark "
+            f"(speedup={summary.get('jax_speedup_vs_numpy')})")
+    else:
+        gate.note(f"OK   invariant: jax beats numpy "
+                  f"(speedup={summary.get('jax_speedup_vs_numpy')}x)")
+    if _num(summary, "jax_fewer_launches_than_tasks") != 1:
+        gate.fail(
+            "invariant: JaxBackend must issue fewer kernel launches "
+            f"than scheduled tile tasks "
+            f"(launches={summary.get('jax_launches')}, "
+            f"tasks={summary.get('jax_tasks')})")
+    else:
+        gate.note(f"OK   invariant: jax launches "
+                  f"{summary.get('jax_launches')} < tasks "
+                  f"{summary.get('jax_tasks')}")
+
+
+def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
+                      base_rows: Dict[str, dict], tol: float,
+                      gate_gflops: bool) -> None:
+    def both(name):
+        pr, base = pr_rows.get(name), base_rows.get(name)
+        if pr is None or base is None:
+            gate.fail(f"row {name!r} missing "
+                      f"(pr={'yes' if pr else 'no'}, "
+                      f"baseline={'yes' if base else 'no'})")
+            return None, None
+        return pr, base
+
+    pr, base = both("backends/summary")
+    if pr is not None:
+        gate.check_ratio("backends/summary", "jax_speedup_vs_numpy",
+                         _num(pr, "jax_speedup_vs_numpy"),
+                         _num(base, "jax_speedup_vs_numpy"),
+                         tol, higher_is_better=True)
+    for name in ("backends/gemm_numpy", "backends/gemm_jax"):
+        pr, base = both(name)
+        if pr is None:
+            continue
+        gate.check_ratio(name, "kernel_launches",
+                         _num(pr, "kernel_launches"),
+                         _num(base, "kernel_launches"),
+                         tol, higher_is_better=False)
+        gate.check_ratio(name, "launches_saved",
+                         _num(pr, "launches_saved"),
+                         _num(base, "launches_saved"),
+                         tol, higher_is_better=True)
+        if gate_gflops:
+            gate.check_ratio(name, "gflops", _num(pr, "gflops"),
+                             _num(base, "gflops"), tol,
+                             higher_is_better=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="BENCH_*.json produced by "
+                                   "`python -m benchmarks.run --json`")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline report")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative regression (default 0.20)")
+    ap.add_argument("--gate-gflops", action="store_true",
+                    help="also gate raw GFLOP/s (like-for-like hosts only)")
+    ap.add_argument("--no-invariants", action="store_true",
+                    help="skip absolute invariant checks")
+    args = ap.parse_args(argv)
+
+    with open(args.report) as f:
+        pr_rows = _rows_by_name(json.load(f))
+    with open(args.baseline) as f:
+        base_rows = _rows_by_name(json.load(f))
+
+    gate = Gate()
+    if not args.no_invariants:
+        check_invariants(gate, pr_rows)
+    check_regressions(gate, pr_rows, base_rows, args.tolerance,
+                      args.gate_gflops)
+
+    for line in gate.notes:
+        print(line)
+    for line in gate.failures:
+        print(line, file=sys.stderr)
+    if gate.failures:
+        print(f"\n{len(gate.failures)} bench gate violation(s)",
+              file=sys.stderr)
+        return 1
+    print("\nbench gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

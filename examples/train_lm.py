@@ -9,9 +9,7 @@ mid-size config so the loss curve is meaningful but CPU-feasible.)
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
 """
 import argparse
-import dataclasses
 
-from repro.configs import get_config
 from repro.launch.train import TrainConfig, run
 
 

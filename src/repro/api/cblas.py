@@ -25,7 +25,7 @@ from typing import Optional
 
 import numpy as np
 
-from .context import BlasxContext, default_context
+from .context import BlasxContext, backend_context, default_context
 
 # ------------------------------------------------------ CBLAS enum values
 CblasRowMajor = 101
@@ -108,15 +108,26 @@ def _view(buf, rows: int, cols: int, ld: int, order: int, name: str,
     raise ValueError(f"invalid Order flag: {order!r}")
 
 
-def _ctx(ctx: Optional[BlasxContext]) -> BlasxContext:
-    return ctx if ctx is not None else default_context()
+def _ctx(ctx: Optional[BlasxContext],
+         backend: Optional[str] = None) -> BlasxContext:
+    if ctx is not None:
+        if backend is not None and ctx.cfg.backend != backend:
+            raise ValueError(
+                f"backend={backend!r} conflicts with ctx backend "
+                f"{ctx.cfg.backend!r}")
+        return ctx
+    if backend is None:
+        return default_context()
+    # calls sharing a backend share one warm-cache module context
+    return backend_context(backend)
 
 
 # =========================================================== the routines
 def cblas_dgemm(order, transa, transb, m: int, n: int, k: int,
                 alpha: float, A, lda: int, B, ldb: int,
                 beta: float, C, ldc: int, *,
-                ctx: Optional[BlasxContext] = None) -> None:
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(B) + beta*C  (C is m x n, updated in place)."""
     ta, tb = _flag(_TRANS, transa, "Trans"), _flag(_TRANS, transb, "Trans")
     ar, ac = (m, k) if ta == "N" else (k, m)
@@ -124,14 +135,15 @@ def cblas_dgemm(order, transa, transb, m: int, n: int, k: int,
     Av = _view(A, ar, ac, lda, order, "A")
     Bv = _view(B, br, bc, ldb, order, "B")
     Cv = _view(C, m, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx).gemm(Av, Bv, Cv if beta != 0.0 else None,
+    out = _ctx(ctx, backend).gemm(Av, Bv, Cv if beta != 0.0 else None,
                          alpha=alpha, beta=beta, transa=ta, transb=tb)
     Cv[...] = out.array()
 
 
 def cblas_dsymm(order, side, uplo, m: int, n: int, alpha: float,
                 A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
-                ctx: Optional[BlasxContext] = None) -> None:
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """C := alpha*A*B + beta*C (Left) or alpha*B*A + beta*C (Right),
     A symmetric with the ``uplo`` triangle stored."""
     sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
@@ -139,14 +151,15 @@ def cblas_dsymm(order, side, uplo, m: int, n: int, alpha: float,
     Av = _view(A, ka, ka, lda, order, "A")
     Bv = _view(B, m, n, ldb, order, "B")
     Cv = _view(C, m, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx).symm(Av, Bv, Cv if beta != 0.0 else None,
+    out = _ctx(ctx, backend).symm(Av, Bv, Cv if beta != 0.0 else None,
                          alpha=alpha, beta=beta, side=sd, uplo=ul)
     Cv[...] = out.array()
 
 
 def cblas_dsyrk(order, uplo, trans, n: int, k: int, alpha: float,
                 A, lda: int, beta: float, C, ldc: int, *,
-                ctx: Optional[BlasxContext] = None) -> None:
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(A)^T + beta*C on the ``uplo`` triangle."""
     ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
     ar, ac = (n, k) if tr == "N" else (k, n)
@@ -155,27 +168,29 @@ def cblas_dsyrk(order, uplo, trans, n: int, k: int, alpha: float,
     # BLAS syrk always reads C's uplo triangle (beta scales it), so seed
     # the context call with Cv even for beta == 0 to preserve the
     # untouched opposite triangle in the writeback.
-    out = _ctx(ctx).syrk(Av, Cv, alpha=alpha, beta=beta, uplo=ul, trans=tr)
+    out = _ctx(ctx, backend).syrk(Av, Cv, alpha=alpha, beta=beta, uplo=ul, trans=tr)
     Cv[...] = out.array()
 
 
 def cblas_dsyr2k(order, uplo, trans, n: int, k: int, alpha: float,
                  A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
-                 ctx: Optional[BlasxContext] = None) -> None:
+                 ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(B)^T + alpha*op(B)*op(A)^T + beta*C."""
     ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
     ar, ac = (n, k) if tr == "N" else (k, n)
     Av = _view(A, ar, ac, lda, order, "A")
     Bv = _view(B, ar, ac, ldb, order, "B")
     Cv = _view(C, n, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx).syr2k(Av, Bv, Cv, alpha=alpha, beta=beta,
+    out = _ctx(ctx, backend).syr2k(Av, Bv, Cv, alpha=alpha, beta=beta,
                           uplo=ul, trans=tr)
     Cv[...] = out.array()
 
 
 def cblas_dtrmm(order, side, uplo, transa, diag, m: int, n: int,
                 alpha: float, A, lda: int, B, ldb: int, *,
-                ctx: Optional[BlasxContext] = None) -> None:
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """B := alpha*op(tri(A))*B (Left) or alpha*B*op(tri(A)) (Right),
     B (m x n) updated in place."""
     sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
@@ -183,14 +198,15 @@ def cblas_dtrmm(order, side, uplo, transa, diag, m: int, n: int,
     ka = m if sd == "L" else n
     Av = _view(A, ka, ka, lda, order, "A")
     Bv = _view(B, m, n, ldb, order, "B", writable=True)
-    out = _ctx(ctx).trmm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+    out = _ctx(ctx, backend).trmm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
                          transa=ta, diag=dg)
     Bv[...] = out.array()
 
 
 def cblas_dtrsm(order, side, uplo, transa, diag, m: int, n: int,
                 alpha: float, A, lda: int, B, ldb: int, *,
-                ctx: Optional[BlasxContext] = None) -> None:
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
     """Solve op(tri(A))*X = alpha*B (Left) or X*op(tri(A)) = alpha*B
     (Right); X overwrites B (m x n) in place."""
     sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
@@ -198,6 +214,6 @@ def cblas_dtrsm(order, side, uplo, transa, diag, m: int, n: int,
     ka = m if sd == "L" else n
     Av = _view(A, ka, ka, lda, order, "A")
     Bv = _view(B, m, n, ldb, order, "B", writable=True)
-    out = _ctx(ctx).trsm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+    out = _ctx(ctx, backend).trsm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
                          transa=ta, diag=dg)
     Bv[...] = out.array()

@@ -150,6 +150,11 @@ class BlasxContext:
         one (used by the legacy wrappers' ``runtime=`` passthrough).
     tile:
         Default tile size for :meth:`tile` and auto-tiled numpy inputs.
+    backend:
+        Execution backend shorthand (``"numpy" | "jax" | "pallas"``);
+        overrides ``config.backend``.  With ``runtime=`` it must match
+        the adopted runtime's backend (a runtime's backend is fixed at
+        construction).
 
     The context is a context manager; :meth:`close` shuts down the
     async executor and drops all cached tiles.  All methods are
@@ -160,7 +165,19 @@ class BlasxContext:
 
     def __init__(self, config: Optional[RuntimeConfig] = None, *,
                  runtime: Optional[BlasxRuntime] = None,
-                 tile: int = DEFAULT_TILE):
+                 tile: int = DEFAULT_TILE,
+                 backend: Optional[str] = None):
+        if backend is not None:
+            if runtime is not None:
+                if runtime.cfg.backend != backend:
+                    raise ValueError(
+                        f"backend={backend!r} conflicts with adopted "
+                        f"runtime's backend {runtime.cfg.backend!r}")
+            elif config is None:
+                config = RuntimeConfig(n_devices=1, mode="sim",
+                                       backend=backend)
+            elif config.backend != backend:
+                config = dataclasses.replace(config, backend=backend)
         self._owns_runtime = runtime is None
         self.runtime = runtime if runtime is not None else BlasxRuntime(
             config or RuntimeConfig(n_devices=1, mode="sim"))
@@ -315,8 +332,10 @@ class BlasxContext:
         rt = self.runtime
         return {
             "calls": self.n_calls,
+            "backend": rt.cfg.backend,
             "comm_bytes": rt.total_comm_bytes(),
             "makespan": rt.makespan(),
+            "launch": rt.launch_stats(),
             "devices": rt.stats(),
         }
 
@@ -589,6 +608,11 @@ def _array_of(x: ArrayLike) -> np.ndarray:
 _default_ctx: Optional[BlasxContext] = None
 _default_lock = threading.Lock()
 
+# per-backend default contexts: legacy callers opting into an execution
+# backend per call (backend="jax") share one warm-cache context per
+# backend, mirroring the unnamed default below
+_backend_ctxs: Dict[str, BlasxContext] = {}
+
 
 def default_context() -> BlasxContext:
     """The module-cached context backing the legacy ``blas3`` functions
@@ -599,6 +623,34 @@ def default_context() -> BlasxContext:
             _default_ctx = BlasxContext(
                 RuntimeConfig(n_devices=1, mode="sim"))
         return _default_ctx
+
+
+def backend_context(backend: str) -> BlasxContext:
+    """The module-cached warm context for one execution backend — the
+    ``backend=`` analogue of :func:`default_context`, shared by the
+    ``blas3`` and ``cblas`` legacy layers so chained per-call usage
+    still hits warm tile caches.
+
+    When the requested backend matches the unnamed default context's
+    (the usual ``numpy`` case), the *same* context is shared — mixing
+    ``gemm(A, B)`` and ``gemm(A, B, backend="numpy")`` must warm one
+    tile cache, not two."""
+    global _default_ctx
+    with _default_lock:
+        d = _default_ctx
+        if d is not None and not d.closed and d.cfg.backend == backend:
+            return d
+        ctx = _backend_ctxs.get(backend)
+        if ctx is None or ctx.closed:
+            ctx = BlasxContext(RuntimeConfig(n_devices=1, mode="sim",
+                                             backend=backend))
+            if backend == "numpy" and (d is None or d.closed):
+                # this IS the default config; claim the default slot so a
+                # later default_context() shares the same warm caches
+                _default_ctx = ctx
+            else:
+                _backend_ctxs[backend] = ctx
+        return ctx
 
 
 def set_default_context(ctx: Optional[BlasxContext]) -> Optional[BlasxContext]:

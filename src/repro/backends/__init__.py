@@ -1,0 +1,46 @@
+"""Pluggable execution backends for the BLASX runtime.
+
+``create_backend(name)`` is the factory the runtime uses; selection is
+threaded through :class:`repro.core.runtime.RuntimeConfig(backend=...)`
+→ :class:`repro.api.BlasxContext` → the ``blas3``/``cblas`` wrappers.
+
+  * ``numpy``  — per-step host BLAS (the seed behavior; baseline);
+  * ``jax``    — whole step group in one jitted XLA dispatch;
+  * ``pallas`` — square full-fill groups through the repo's Pallas TPU
+                 kernel, everything else via the jax path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from .base import ExecutionBackend, GroupResult, StepGroupKey
+from .jax_backend import JaxBackend
+from .numpy_backend import NumpyBackend
+from .pallas_backend import PallasBackend
+
+BACKENDS: Dict[str, Type[ExecutionBackend]] = {
+    "numpy": NumpyBackend,
+    "jax": JaxBackend,
+    "pallas": PallasBackend,
+}
+
+
+def available_backends():
+    return tuple(BACKENDS)
+
+
+def create_backend(name: str) -> ExecutionBackend:
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {tuple(BACKENDS)}"
+        ) from None
+    return cls()
+
+
+__all__ = [
+    "ExecutionBackend", "GroupResult", "StepGroupKey",
+    "NumpyBackend", "JaxBackend", "PallasBackend",
+    "BACKENDS", "available_backends", "create_backend",
+]

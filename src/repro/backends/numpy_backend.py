@@ -1,0 +1,32 @@
+"""Host-BLAS reference backend — the seed runtime's behavior, extracted.
+
+Each k-step is one ``np.dot`` call and each accumulate one numpy add:
+no batching, one "launch" per step, per-step products summed in the
+original k order (bitwise identical to the seed engine).  This is the
+baseline the batched JAX/Pallas backends are measured against
+(``kernel_launches == batched_steps`` on its ledger), and the
+numerically-authoritative engine the parity suite compares to.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .base import ExecutionBackend, GroupResult, StepGroupKey
+
+
+class NumpyBackend(ExecutionBackend):
+    name = "numpy"
+
+    def run_group(self, key: StepGroupKey, a_tiles: Sequence[np.ndarray],
+                  b_tiles: Sequence[np.ndarray]) -> GroupResult:
+        s = key.steps
+        products = []
+        for i in range(0, len(a_tiles), s):
+            acc = np.dot(a_tiles[i], b_tiles[i])
+            for j in range(i + 1, i + s):
+                acc = acc + np.dot(a_tiles[j], b_tiles[j])
+            products.append(acc)
+        return GroupResult(products, launches=len(a_tiles),
+                           engine=self.name)

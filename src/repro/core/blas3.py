@@ -39,25 +39,34 @@ def _finish(out) -> np.ndarray:
 
 
 def _context(config: Optional[RuntimeConfig],
-             runtime: Optional[BlasxRuntime]):
+             runtime: Optional[BlasxRuntime],
+             backend: Optional[str] = None):
     """Resolve the executing context for one legacy call.
+
+    ``backend`` selects the execution backend (numpy | jax | pallas)
+    for this call; with ``runtime=`` it must match the runtime's own.
 
     Imported lazily: ``repro.api`` depends on ``repro.core`` modules,
     so the dependency must point api -> core at import time."""
-    from ..api.context import BlasxContext, default_context
+    from ..api.context import (BlasxContext, backend_context,
+                               default_context)
 
     if runtime is not None:
-        return BlasxContext(runtime=runtime)
+        return BlasxContext(runtime=runtime, backend=backend)
     if config is not None:
-        return BlasxContext(config)
+        return BlasxContext(config, backend=backend)
+    if backend is not None:
+        # module-cached warm context per backend (mirrors the default)
+        return backend_context(backend)
     return default_context()
 
 
 # ============================================================== GEMM (1a)
 def gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+         runtime: Optional[BlasxRuntime] = None,
+         backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.gemm(A, B, C, alpha=alpha, beta=beta,
                             transa=transa, transb=transb, tile=tile))
 
@@ -65,8 +74,9 @@ def gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N",
 # ============================================================== SYRK (1b)
 def syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+         runtime: Optional[BlasxRuntime] = None,
+         backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.syrk(A, C, alpha=alpha, beta=beta, uplo=uplo,
                             trans=trans, tile=tile))
 
@@ -74,8 +84,9 @@ def syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
 # ============================================================= SYR2K (1e)
 def syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
           tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-          runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+          runtime: Optional[BlasxRuntime] = None,
+          backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.syr2k(A, B, C, alpha=alpha, beta=beta, uplo=uplo,
                              trans=trans, tile=tile))
 
@@ -83,8 +94,9 @@ def syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
 # ============================================================== SYMM (1f)
 def symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+         runtime: Optional[BlasxRuntime] = None,
+         backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.symm(A, B, C, alpha=alpha, beta=beta, side=side,
                             uplo=uplo, tile=tile))
 
@@ -92,8 +104,9 @@ def symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U",
 # ============================================================== TRMM (1d)
 def trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+         runtime: Optional[BlasxRuntime] = None,
+         backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.trmm(A, B, alpha=alpha, side=side, uplo=uplo,
                             transa=transa, diag=diag, tile=tile))
 
@@ -101,8 +114,9 @@ def trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
 # ============================================================== TRSM (1c)
 def trsm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
-         runtime: Optional[BlasxRuntime] = None) -> np.ndarray:
-    ctx = _context(config, runtime)
+         runtime: Optional[BlasxRuntime] = None,
+         backend: Optional[str] = None) -> np.ndarray:
+    ctx = _context(config, runtime, backend)
     return _finish(ctx.trsm(A, B, alpha=alpha, side=side, uplo=uplo,
                             transa=transa, diag=diag, tile=tile))
 

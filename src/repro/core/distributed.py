@@ -29,14 +29,12 @@ used as oracle and as the paper-faithful "unoptimized" baseline.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 # --------------------------------------------------------------------------

@@ -31,16 +31,18 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..backends import create_backend
+from ..backends.base import StepGroupKey
 from .alru import Alru
 from .coherence import MesixDirectory
 from .heap import BlasxHeap
 from .task import Task, TileRef
 from .taskqueue import ReadyQueue, ReservationStation
-from .tile_kernels import MATMULS, get_solver, materialize
+from .tile_kernels import get_solver, materialize
 from .tiling import TiledMatrix, TileKey
 
 # paper Table IV: measured DMA throughputs on Everest
@@ -59,7 +61,11 @@ class RuntimeConfig:
     n_streams: int = 4                    # paper: 4 concurrent tasks/streams
     rs_slots: Optional[int] = None        # RS capacity (default 2*n_streams)
     policy: str = "blasx"
-    kernel: str = "numpy"                 # numpy | jax | pallas
+    # execution backend: numpy | jax | pallas (see repro.backends).
+    # ``kernel`` is the legacy spelling; ``backend`` wins when both are
+    # given and the two are kept equal after __post_init__.
+    kernel: str = "numpy"
+    backend: Optional[str] = None
     speeds: Optional[Sequence[float]] = None   # realtime device speeds
     # what a static scheduler *believes* the speeds are (MAGMA/PaRSEC
     # assume constant nominal speed; realtime saturation differs — §IV-C)
@@ -83,6 +89,11 @@ class RuntimeConfig:
         if self.policy not in ("blasx", "parsec", "cublasxt", "static",
                                "supermatrix"):
             raise ValueError(f"unknown policy {self.policy}")
+        if self.backend is None:
+            self.backend = self.kernel
+        if self.backend not in ("numpy", "jax", "pallas"):
+            raise ValueError(f"unknown backend {self.backend}")
+        self.kernel = self.backend
         if self.speeds is None:
             self.speeds = [1.0] * self.n_devices
         if len(self.speeds) != self.n_devices:
@@ -143,6 +154,15 @@ class Ledger:
     comm_time: float = 0.0        # modeled seconds (total, incl. overlapped)
     unoverlapped_comm: float = 0.0  # Fig. 8 "COMM"
     busy_time: float = 0.0        # modeled wall contribution
+    # batched-dispatch accounting (execute=True runs only): how many
+    # k-steps went through the backend, how many grouped dispatches
+    # they collapsed into, and what each engine actually executed —
+    # ``batched_steps - kernel_launches`` is the "launches saved" that
+    # the bench lane tracks across PRs.
+    batched_steps: int = 0
+    batched_groups: int = 0
+    kernel_launches: int = 0
+    engine_flops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class DeviceSim:
@@ -169,6 +189,22 @@ class DeviceSim:
         self.alru.on_evict = _on_evict
 
 
+@dataclasses.dataclass
+class _TaskExec:
+    """In-flight execution record of one task within a device batch:
+    materialized inputs gathered in phase 1, per-step products filled
+    in by the backend dispatch in phase 2."""
+
+    task: Task
+    a_tiles: List[np.ndarray]
+    b_tiles: List[np.ndarray]
+    products: List[Optional[np.ndarray]]  # per-step path (mixed signatures)
+    acc: Optional[np.ndarray] = None    # task-contraction path result
+    diag: Optional[np.ndarray] = None   # TRSM diagonal tile
+    rhs: Optional[np.ndarray] = None    # TRSM right-hand side
+    cin: Optional[np.ndarray] = None    # beta != 0 C input
+
+
 class BlasxRuntime:
     """Executes taskized L3 BLAS calls over simulated devices (Alg. 1).
 
@@ -189,7 +225,7 @@ class BlasxRuntime:
         self.directory = MesixDirectory(cfg.n_devices, cfg.p2p_groups)
         self.devices = [DeviceSim(d, cfg, self.directory)
                         for d in range(cfg.n_devices)]
-        self._matmul = MATMULS[cfg.kernel]
+        self.backend = create_backend(cfg.backend)
         self._solver = get_solver()
         self.runs = 0
 
@@ -375,16 +411,39 @@ class BlasxRuntime:
     def _execute_batch(self, d: DeviceSim, batch: List[Task]) -> float:
         """Run up to ``n_streams`` tasks as one overlapped batch; returns
         the modeled duration.  Readers are released at the end — the
-        paper's StreamsSynch + ReaderUpdate point."""
+        paper's StreamsSynch + ReaderUpdate point.
+
+        Execution is a three-phase pipeline:
+
+          1. *gather*   — acquire every input tile through the two-level
+             cache (all communication accounting happens here, in the
+             same per-task order the sequential engine used);
+          2. *dispatch* — group the batch's k-steps by
+             (op, trans, fill, tile-shape, dtype) and hand each group to
+             the execution backend as ONE batched call — the paper's
+             stream-level concurrency, minus the per-step dispatch tax;
+          3. *finalize* — per-task epilogue (alpha/beta, TRSM solve,
+             triangle masks) and MESI-X write-back.
+
+        Tasks in one batch are dependency-free w.r.t. each other (the
+        ReadyQueue only releases a task after its deps *complete*, and
+        completion happens after the batch), so hoisting all reads
+        before all writes preserves the sequential semantics."""
         acquired: List[TileKey] = []
         comm_s = 0.0
         compute_s = 0.0
+        recs: List[_TaskExec] = []
         for t in batch:
-            comm1, flops1 = self._execute_task(d, t, acquired)
-            comm_s += comm1
-            compute_s += flops1 / (d.speed * self.cfg.peak_flops)
+            rec, secs = self._gather_task(d, t, acquired)
+            recs.append(rec)
+            comm_s += secs
+        if self.cfg.execute:
+            self._dispatch_steps(d, recs)
+        for rec in recs:
+            comm_s += self._finalize_task(d, rec)
+            compute_s += rec.task.flops / (d.speed * self.cfg.peak_flops)
             d.ledger.tasks += 1
-            d.ledger.flops += flops1
+            d.ledger.flops += rec.task.flops
         # reader update (the ALRU may evict these from now on)
         for key in acquired:
             d.alru.release(key)
@@ -396,47 +455,117 @@ class BlasxRuntime:
         d.ledger.unoverlapped_comm += comm_s
         return compute_s + comm_s
 
-    def _execute_task(self, d: DeviceSim, t: Task,
-                      acquired: List[TileKey]) -> Tuple[float, int]:
+    def _gather_task(self, d: DeviceSim, t: Task,
+                     acquired: List[TileKey]) -> Tuple["_TaskExec", float]:
+        """Phase 1: pull every input tile of one task through the cache
+        hierarchy (ledger-charged) and materialize it for compute."""
         comm_s = 0.0
-        out_grid = self._matrices[self._out_id]
-        acc: Optional[np.ndarray] = None
+        a_tiles: List[np.ndarray] = []
+        b_tiles: List[np.ndarray] = []
         for step in t.steps:
             a, s1 = self._acquire(d, step.a, acquired)
             b, s2 = self._acquire(d, step.b, acquired)
             comm_s += s1 + s2
-            if self.cfg.execute:
-                prod = self._matmul(a, b)
-                acc = prod if acc is None else acc + prod
-        if acc is None and self.cfg.execute:
-            h, w = out_grid.grid.tile_shape(t.i, t.j)
-            acc = np.zeros((h, w), dtype=out_grid.data.dtype)
-
+            a_tiles.append(a)
+            b_tiles.append(b)
+        rec = _TaskExec(task=t, a_tiles=a_tiles, b_tiles=b_tiles,
+                        products=[None] * len(t.steps))
         if t.finalize is not None:  # TRSM
-            diag, s1 = self._acquire(d, t.finalize.diag_ref, acquired)
-            comm_s += s1
-            rhs, s2 = self._bypass_read(d, t.finalize.rhs_ref)
-            comm_s += s2
-            if self.cfg.execute:
-                result = self._solver(diag, t.alpha * rhs - acc,
+            rec.diag, s1 = self._acquire(d, t.finalize.diag_ref, acquired)
+            rec.rhs, s2 = self._bypass_read(d, t.finalize.rhs_ref)
+            comm_s += s1 + s2
+        elif t.read_c is not None:
+            rec.cin, s3 = self._bypass_read(d, t.read_c)
+            comm_s += s3
+        return rec, comm_s
+
+    def _step_key(self, t: Task, step, a: np.ndarray, b: np.ndarray,
+                  steps: int = 1) -> StepGroupKey:
+        return StepGroupKey(
+            op=t.routine, transa=step.a.trans, transb=step.b.trans,
+            fill_a=step.a.fill, fill_b=step.b.fill,
+            m=a.shape[0], k=a.shape[1], n=b.shape[1],
+            dtype=str(np.promote_types(a.dtype, b.dtype)), steps=steps)
+
+    def _dispatch_steps(self, d: DeviceSim, recs: List["_TaskExec"]) -> None:
+        """Phase 2: one backend call per same-signature group.
+
+        A task whose k-steps all share one signature (the common case:
+        every interior tile of GEMM/SYRK/TRSM sweeps) is dispatched as
+        a single *item* — its whole k-loop contracts inside the backend
+        (``acc = sum_j a_j @ b_j``), so same-shape tasks in the batch
+        become one work-centric batched call.  Mixed-signature tasks
+        (SYMM/TRMM diagonal fills, ragged edge tiles) degrade to
+        per-step items within their signature groups."""
+        task_groups: Dict[StepGroupKey, List[_TaskExec]] = {}
+        step_groups: Dict[StepGroupKey, List[Tuple[_TaskExec, int]]] = {}
+        for rec in recs:
+            t = rec.task
+            if not t.steps:
+                continue
+            keys = [self._step_key(t, step, rec.a_tiles[i], rec.b_tiles[i])
+                    for i, step in enumerate(t.steps)]
+            if len(set(keys)) == 1:
+                key = dataclasses.replace(keys[0], steps=len(t.steps))
+                task_groups.setdefault(key, []).append(rec)
+            else:
+                for i, key in enumerate(keys):
+                    step_groups.setdefault(key, []).append((rec, i))
+        led = d.ledger
+        for key, t_recs in task_groups.items():
+            res = self.backend.run_group(
+                key, [a for r in t_recs for a in r.a_tiles],
+                [b for r in t_recs for b in r.b_tiles])
+            n_steps = key.steps * len(t_recs)
+            led.batched_groups += 1
+            led.batched_steps += n_steps
+            led.kernel_launches += res.launches
+            led.engine_flops[res.engine] = (
+                led.engine_flops.get(res.engine, 0)
+                + key.flops_per_item * len(t_recs))
+            for rec, acc in zip(t_recs, res.products):
+                rec.acc = acc
+        for key, entries in step_groups.items():
+            res = self.backend.run_group(
+                key, [r.a_tiles[i] for r, i in entries],
+                [r.b_tiles[i] for r, i in entries])
+            led.batched_groups += 1
+            led.batched_steps += len(entries)
+            led.kernel_launches += res.launches
+            led.engine_flops[res.engine] = (
+                led.engine_flops.get(res.engine, 0)
+                + key.flops_per_item * len(entries))
+            for (rec, idx), prod in zip(entries, res.products):
+                rec.products[idx] = prod
+
+    def _finalize_task(self, d: DeviceSim, rec: "_TaskExec") -> float:
+        """Phase 3: per-task epilogue + write-back; returns comm secs."""
+        t = rec.task
+        out_grid = self._matrices[self._out_id]
+        comm_s = 0.0
+        if self.cfg.execute:
+            acc: Optional[np.ndarray] = rec.acc
+            if acc is None:
+                for prod in rec.products:  # original k-step order
+                    acc = prod if acc is None else acc + prod
+            if acc is None:
+                h, w = out_grid.grid.tile_shape(t.i, t.j)
+                acc = np.zeros((h, w), dtype=out_grid.data.dtype)
+            if t.finalize is not None:  # TRSM
+                result = self._solver(rec.diag, t.alpha * rec.rhs - acc,
                                       lower=t.finalize.lower,
                                       unit_diag=t.finalize.unit_diag)
-        else:
-            if self.cfg.execute:
-                result = t.alpha * acc
-            if t.read_c is not None:
-                cin, s3 = self._bypass_read(d, t.read_c)
-                comm_s += s3
-                if self.cfg.execute:
-                    result = result + t.beta * cin
-
-        if self.cfg.execute and t.out_mask is not None:
-            # diagonal SYRK/SYR2K tile: only the uplo triangle is written
-            orig = out_grid.read_tile(t.i, t.j)
-            if t.out_mask == "tri_u":
-                result = np.triu(result) + np.tril(orig, -1)
             else:
-                result = np.tril(result) + np.triu(orig, 1)
+                result = t.alpha * acc
+                if rec.cin is not None:
+                    result = result + t.beta * rec.cin
+            if t.out_mask is not None:
+                # diagonal SYRK/SYR2K tile: only the uplo triangle is written
+                orig = out_grid.read_tile(t.i, t.j)
+                if t.out_mask == "tri_u":
+                    result = np.triu(result) + np.tril(orig, -1)
+                else:
+                    result = np.tril(result) + np.triu(orig, 1)
         # MESI-X ephemeral M: write back to host immediately, invalidate
         # any cached copies, transition to I (Fig. 3).
         for holder in self.directory.on_write(t.out, d.id):
@@ -446,7 +575,7 @@ class BlasxRuntime:
         wb = out_grid.nbytes(t.i, t.j)
         d.ledger.d2h_bytes += wb
         comm_s += wb / self.cfg.h2d_bw_eff
-        return comm_s, t.flops
+        return comm_s
 
     # ------------------------------------------------------ data movement
     def _acquire(self, d: DeviceSim, ref: TileRef,
@@ -535,6 +664,26 @@ class BlasxRuntime:
                        cache_used=d.heap.used, clock=d.clock)
             out[f"device{d.id}"] = led
         return out
+
+    def launch_stats(self) -> Dict[str, object]:
+        """Batched-dispatch accounting across devices: how many k-steps
+        ran, how many kernel launches they cost, and which engine did
+        the flops — the bench lane's ``launches saved`` source."""
+        engine_flops: Dict[str, int] = {}
+        for d in self.devices:
+            for eng, fl in d.ledger.engine_flops.items():
+                engine_flops[eng] = engine_flops.get(eng, 0) + fl
+        steps = sum(d.ledger.batched_steps for d in self.devices)
+        launches = sum(d.ledger.kernel_launches for d in self.devices)
+        return {
+            "backend": self.cfg.backend,
+            "tasks": sum(d.ledger.tasks for d in self.devices),
+            "steps": steps,
+            "groups": sum(d.ledger.batched_groups for d in self.devices),
+            "kernel_launches": launches,
+            "launches_saved": steps - launches,
+            "engine_flops": engine_flops,
+        }
 
     def total_comm_bytes(self) -> Dict[str, int]:
         return {

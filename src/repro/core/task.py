@@ -16,7 +16,6 @@ Task properties (paper §IV-A):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, Optional, Sequence, Tuple
 
 from .tiling import TileGrid, TileKey

@@ -1,24 +1,18 @@
-"""Per-tile compute kernels for the threaded/simulated runtime.
-
-The runtime is kernel-pluggable:
-  * ``numpy``  — host BLAS via np.dot (default for the reproduction
-                 engine: fast, multi-thread safe);
-  * ``jax``    — jitted jnp.dot (per-tile XLA kernels);
-  * ``pallas`` — the repro Pallas matmul in interpret mode (used by
-                 tests to prove the TPU kernel composes with the
-                 runtime; slow on CPU).
+"""Tile materialization + per-tile solver kernels for the runtime.
 
 Fill modifiers realize triangular/symmetric *storage* semantics: stored
 tiles are always dense, only the ``uplo`` triangle is meaningful, so we
 mask/symmetrize on load (before the §III-C transpose trick).
+
+Step *execution* moved to the pluggable backends in
+``repro.backends`` (numpy | jax | pallas, batched per step group).
+The TRSM finalize solver stays here — it runs per task on the host
+either way.
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 
-from . import task as task_mod
 from .task import (FILL_FULL, FILL_SYM_L, FILL_SYM_U, FILL_TRI_L,
                    FILL_TRI_LU, FILL_TRI_U, FILL_TRI_UU, TileRef)
 
@@ -52,41 +46,7 @@ def materialize(tile: np.ndarray, ref: TileRef) -> np.ndarray:
     return out
 
 
-# ----------------------------------------------------------------- kernels
-def _matmul_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    return np.dot(a, b)
-
-
-@functools.lru_cache(maxsize=None)
-def _jax_dot():
-    import jax
-    import jax.numpy as jnp
-
-    @jax.jit
-    def dot(a, b):
-        return jnp.dot(a, b, preferred_element_type=jnp.float64
-                       if a.dtype == jnp.float64 else jnp.float32)
-
-    return dot
-
-
-def _matmul_jax(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    return np.asarray(_jax_dot()(a, b))
-
-
-def _matmul_pallas(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    from ..kernels import ops as kops
-
-    return np.asarray(kops.matmul(a, b, interpret=True))
-
-
-MATMULS = {
-    "numpy": _matmul_numpy,
-    "jax": _matmul_jax,
-    "pallas": _matmul_pallas,
-}
-
-
+# ------------------------------------------------------------ TRSM solver
 def solve_triangular(a: np.ndarray, b: np.ndarray, lower: bool,
                      unit_diag: bool) -> np.ndarray:
     """Tile-level triangular solve for the TRSM finalize step."""

@@ -9,10 +9,8 @@ caller's in_shardings; per-host slicing uses the same pure function.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

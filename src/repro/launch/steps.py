@@ -6,7 +6,6 @@ directly; real drivers feed arrays of the same shapes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

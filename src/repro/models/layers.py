@@ -1,7 +1,6 @@
 """Shared building blocks: parameter maker, norms, RoPE, activations."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -17,7 +17,6 @@ every 6 Mamba layers) are expressed as segments of scans.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

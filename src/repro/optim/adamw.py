@@ -8,7 +8,7 @@ Pure JAX, pytree-native — no optax dependency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ legacy blas3 functions, BlasxContext methods, and cblas_* wrappers."""
 import numpy as np
 import pytest
 
-from repro.api import (BlasxContext, CblasColMajor, CblasLeft, CblasLower,
+from repro.api import (BlasxContext, CblasColMajor, CblasLower,
                        CblasNonUnit, CblasNoTrans, CblasRight, CblasRowMajor,
                        CblasTrans, CblasUnit, CblasUpper, MatrixHandle,
                        cblas_dgemm, cblas_dsymm, cblas_dsyr2k, cblas_dsyrk,

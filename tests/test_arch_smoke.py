@@ -7,8 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, all_configs, cell_supported, \
-    get_config
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
 from repro.models import Model
 
 pytestmark = pytest.mark.slow  # full per-arch sweeps dominate suite time

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import (gemm, ref_gemm, ref_symm, ref_syr2k, ref_syrk,
                         ref_trmm, ref_trsm, symm, syr2k, syrk, trmm, trsm)
-from repro.core.runtime import BlasxRuntime, RuntimeConfig
+from repro.core.runtime import RuntimeConfig
 
 RNG = np.random.default_rng(42)
 TOL = dict(rtol=1e-10, atol=1e-10)

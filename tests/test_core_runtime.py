@@ -3,12 +3,11 @@ scheduling, communication ledger, heap — the paper's §IV mechanisms."""
 import numpy as np
 import pytest
 
-from repro.core import gemm, trsm
+from repro.core import gemm
 from repro.core.alru import Alru
 from repro.core.coherence import MesixDirectory
 from repro.core.heap import BlasxHeap, HeapError
 from repro.core.runtime import BlasxRuntime, RuntimeConfig
-from repro.core.task import taskize_gemm, taskize_trsm
 from repro.core.tiling import TiledMatrix, TileGrid, TileKey, degree_of_parallelism
 
 RNG = np.random.default_rng(7)

@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import gemm, ref_gemm
+from repro.core import gemm
 from repro.core.alru import Alru
 from repro.core.coherence import MesixDirectory
 from repro.core.heap import BlasxHeap

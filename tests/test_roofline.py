@@ -1,6 +1,5 @@
 """Roofline machinery: HLO collective parser, wire-byte weighting, term
 math, and MODEL_FLOPS accounting."""
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, fault
 tolerance, and the end-to-end train/serve drivers on reduced configs."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import Checkpointer
-from repro.configs import get_config
 from repro.data import DataConfig, DataIterator, batch_at_step
 from repro.optim import adamw
 
