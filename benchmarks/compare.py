@@ -11,8 +11,11 @@ Two classes of checks:
 
 * **Invariants** — absolute properties of the PR report that must hold
   on any machine: the batched JaxBackend beats the per-step
-  NumpyBackend wall-clock on the quick GEMM benchmark, and issues
-  strictly fewer kernel launches than scheduled tile tasks.
+  NumpyBackend wall-clock on the quick GEMM benchmark, issues
+  strictly fewer kernel launches than scheduled tile tasks, and the
+  SGEMM lane (float32 storage) is at least as fast as the DGEMM lane
+  on the jax backend (half the cache/stage bytes, no f64->f32 staging
+  cast — see benchmarks/backends.py).
 * **Regressions vs baseline** — metrics compared against
   ``benchmarks/baseline.json`` with a tolerance (default 20%; CI
   passes 35%): the jax-vs-numpy speedup ratio and the deterministic
@@ -105,6 +108,14 @@ def check_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
         gate.note(f"OK   invariant: jax launches "
                   f"{summary.get('jax_launches')} < tasks "
                   f"{summary.get('jax_tasks')}")
+    if _num(summary, "jax_f32_ge_f64") != 1:
+        gate.fail(
+            "invariant: the SGEMM lane (float32 storage) must be at "
+            "least as fast as DGEMM on the jax backend (10% noise floor; "
+            f"f32 speedup={summary.get('jax_f32_speedup_vs_f64')})")
+    else:
+        gate.note(f"OK   invariant: jax f32 >= f64 wall-clock "
+                  f"(speedup={summary.get('jax_f32_speedup_vs_f64')}x)")
 
 
 def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
@@ -125,7 +136,12 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
                          _num(pr, "jax_speedup_vs_numpy"),
                          _num(base, "jax_speedup_vs_numpy"),
                          tol, higher_is_better=True)
-    for name in ("backends/gemm_numpy", "backends/gemm_jax"):
+        gate.check_ratio("backends/summary", "jax_f32_speedup_vs_f64",
+                         _num(pr, "jax_f32_speedup_vs_f64"),
+                         _num(base, "jax_f32_speedup_vs_f64"),
+                         tol, higher_is_better=True)
+    for name in ("backends/gemm_numpy", "backends/gemm_jax",
+                 "backends/gemm_numpy_f32", "backends/gemm_jax_f32"):
         pr, base = both(name)
         if pr is None:
             continue

@@ -7,19 +7,23 @@ operands, per-call ledger snapshots (:class:`CallRecord`), async
 submission (:class:`BlasFuture`) and batched GEMM for serving-shaped
 workloads.
 
-Low-level layer: ``repro.api.cblas`` — strict CBLAS signatures
-(``cblas_dgemm`` et al.) with order/leading-dimension semantics and
-in-place output updates, for legacy callers.
+Low-level layer: ``repro.api.cblas`` — strict CBLAS signatures in both
+precisions (``cblas_dgemm`` / ``cblas_sgemm`` et al.) with
+order/leading-dimension semantics and in-place output updates, for
+legacy callers.
 
 The legacy numpy-in/numpy-out functions in ``repro.core.blas3`` are
-thin wrappers over :func:`default_context`.
+thin wrappers over :func:`default_context`.  Every surface takes
+``dtype=`` (see ``repro.core.dtypes`` for the supported set per
+backend).
 """
 from .batch import gemm_batched, gemm_strided_batched
 from .cblas import (CblasColMajor, CblasLeft, CblasLower, CblasNonUnit,
                     CblasNoTrans, CblasRight, CblasRowMajor, CblasTrans,
                     CblasConjTrans, CblasUnit, CblasUpper, cblas_dgemm,
                     cblas_dsymm, cblas_dsyr2k, cblas_dsyrk, cblas_dtrmm,
-                    cblas_dtrsm)
+                    cblas_dtrsm, cblas_sgemm, cblas_ssymm, cblas_ssyr2k,
+                    cblas_ssyrk, cblas_strmm, cblas_strsm)
 from .context import (BlasxContext, CallRecord, MatrixHandle,
                       default_context, set_default_context)
 from .futures import BlasFuture
@@ -30,6 +34,8 @@ __all__ = [
     "gemm_batched", "gemm_strided_batched",
     "cblas_dgemm", "cblas_dsymm", "cblas_dsyrk", "cblas_dsyr2k",
     "cblas_dtrmm", "cblas_dtrsm",
+    "cblas_sgemm", "cblas_ssymm", "cblas_ssyrk", "cblas_ssyr2k",
+    "cblas_strmm", "cblas_strsm",
     "CblasRowMajor", "CblasColMajor", "CblasNoTrans", "CblasTrans",
     "CblasConjTrans", "CblasUpper", "CblasLower", "CblasNonUnit",
     "CblasUnit", "CblasLeft", "CblasRight",

@@ -16,21 +16,22 @@ import numpy as np
 def gemm_batched(ctx, As: Sequence, Bs: Sequence,
                  Cs: Optional[Sequence] = None, *, alpha: float = 1.0,
                  beta: float = 0.0, transa: str = "N", transb: str = "N",
-                 tile: Optional[int] = None) -> List:
+                 tile: Optional[int] = None, dtype=None) -> List:
     """Pointer-array batch: ``out[i] = alpha*op(As[i])@op(Bs[i]) +
     beta*Cs[i]``.
 
     ``As``/``Bs`` may mix numpy arrays and ``MatrixHandle``s; repeating
     one handle across the batch (shared weights) is the intended warm
-    path.  Returns a list of ``MatrixHandle``s.
+    path.  ``dtype`` pins the batch's storage precision (same rules as
+    ``ctx.gemm``).  Returns a list of ``MatrixHandle``s.
     """
     if len(As) != len(Bs):
         raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Bs)} B's")
     if Cs is not None and len(Cs) != len(As):
         raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Cs)} C's")
     # pre-register handles so every batch entry shares tile keys
-    Ahs = [ctx.tile(a, tile) for a in As]
-    Bhs = [ctx.tile(b, tile) for b in Bs]
+    Ahs = [ctx.tile(a, tile, dtype=dtype) for a in As]
+    Bhs = [ctx.tile(b, tile, dtype=dtype) for b in Bs]
     # synchronous loop, NOT ctx.submit per entry: the context serializes
     # execution on its lock anyway, and nesting submissions would
     # deadlock the single-worker executor when the batch itself was
@@ -38,7 +39,7 @@ def gemm_batched(ctx, As: Sequence, Bs: Sequence,
     return [
         ctx.gemm(Ahs[i], Bhs[i], None if Cs is None else Cs[i],
                  alpha=alpha, beta=beta, transa=transa, transb=transb,
-                 tile=tile)
+                 tile=tile, dtype=dtype)
         for i in range(len(As))
     ]
 
@@ -46,7 +47,8 @@ def gemm_batched(ctx, As: Sequence, Bs: Sequence,
 def gemm_strided_batched(ctx, A, B, C=None, *, alpha: float = 1.0,
                          beta: float = 0.0, transa: str = "N",
                          transb: str = "N",
-                         tile: Optional[int] = None) -> np.ndarray:
+                         tile: Optional[int] = None,
+                         dtype=None) -> np.ndarray:
     """Strided batch over 3-D operands (batch axis first).
 
     A 2-D operand broadcasts across the batch (stride 0 — the shared
@@ -76,13 +78,14 @@ def gemm_strided_batched(ctx, A, B, C=None, *, alpha: float = 1.0,
     nb = sizes.pop()
 
     # broadcast operands become one shared handle (stride-0 reuse)
-    Ah = ctx.tile(A, tile) if a3 is None else None
-    Bh = ctx.tile(B, tile) if b3 is None else None
+    Ah = ctx.tile(A, tile, dtype=dtype) if a3 is None else None
+    Bh = ctx.tile(B, tile, dtype=dtype) if b3 is None else None
     outs = gemm_batched(
         ctx,
         [Ah if a3 is None else a3[i] for i in range(nb)],
         [Bh if b3 is None else b3[i] for i in range(nb)],
         None if C is None else [C if c3 is None else c3[i]
                                 for i in range(nb)],
-        alpha=alpha, beta=beta, transa=transa, transb=transb, tile=tile)
+        alpha=alpha, beta=beta, transa=transa, transb=transb, tile=tile,
+        dtype=dtype)
     return np.stack([o.array() for o in outs])

@@ -1,23 +1,33 @@
 """CBLAS-compatible legacy layer (the paper's backward-compatibility
 goal, after the GSL two-layer design).
 
-Strict C-interface signatures for the six double-precision L3 routines
-— ``cblas_dgemm``, ``cblas_dsymm``, ``cblas_dsyrk``, ``cblas_dsyr2k``,
-``cblas_dtrmm``, ``cblas_dtrsm`` — with order/trans/side/uplo/diag
+Strict C-interface signatures for the six L3 routines in both
+precisions — double (``cblas_dgemm``, ``cblas_dsymm``, ``cblas_dsyrk``,
+``cblas_dsyr2k``, ``cblas_dtrmm``, ``cblas_dtrsm``) and single
+(``cblas_sgemm``, ``cblas_ssymm``, ``cblas_ssyrk``, ``cblas_ssyr2k``,
+``cblas_strmm``, ``cblas_strsm``) — with order/trans/side/uplo/diag
 enums, explicit leading dimensions, and in-place updates of the output
 buffer, all executed by a persistent :class:`~repro.api.BlasxContext`
-(the module default unless ``ctx=`` is given).
+(the module default unless ``ctx=`` is given).  The two precision
+families share one implementation parameterized by dtype; the ``d``
+routines run float64 end to end, the ``s`` routines float32 (the
+jax/pallas engines accumulate f32 either way — see
+``repro.core.dtypes``).
 
 Buffers may be
 
-* flat 1-D float64 arrays, interpreted through ``ld`` under the given
-  ``Order`` exactly as C callers lay them out, or
-* 2-D numpy arrays of the routine's logical shape (``ld`` is then
-  validated against the dense leading dimension).
+* flat 1-D arrays of the routine's dtype, interpreted through ``ld``
+  under the given ``Order`` exactly as C callers lay them out, or
+* 2-D numpy arrays of the routine's logical shape.  ``ld`` must then
+  describe the array's actual memory layout: the dense leading
+  dimension, or — for a strided view into padded storage — the padded
+  one (a ``ld`` that matches neither raises instead of silently
+  reading the wrong elements).
 
 The output buffer (``C`` for gemm/symm/syrk/syr2k, ``B`` for
-trmm/trsm) must be float64 and writable — the routines update it in
-place and return ``None``, as legacy callers expect.
+trmm/trsm) must be exactly the routine's dtype and writable — the
+routines update it in place and return ``None``, as legacy callers
+expect.
 """
 from __future__ import annotations
 
@@ -58,14 +68,19 @@ def _flag(table, value, what: str) -> str:
 
 
 def _view(buf, rows: int, cols: int, ld: int, order: int, name: str,
-          writable: bool = False) -> np.ndarray:
+          writable: bool = False, dtype=np.float64) -> np.ndarray:
     """Logical ``rows x cols`` view of a CBLAS buffer.
 
     Flat buffers follow the C convention: element (i, j) lives at
     ``i*ld + j`` (row major) or ``i + j*ld`` (column major).  The
     returned array is a *view* whenever numpy allows, which is what
     makes the in-place output update visible to the caller.
+
+    ``dtype`` is the routine's precision (float64 for the ``d``
+    family, float32 for ``s``): output buffers must match it exactly;
+    read-only inputs of other dtypes are cast.
     """
+    dtype = np.dtype(dtype)
     if writable and not isinstance(buf, np.ndarray):
         # np.asarray on a list would update a detached copy and the
         # caller's buffer would silently keep its old contents
@@ -73,24 +88,51 @@ def _view(buf, rows: int, cols: int, ld: int, order: int, name: str,
                         f"got {type(buf).__name__}")
     a = np.asarray(buf)
     if writable:
-        if a.dtype != np.float64:
-            raise TypeError(f"{name}: output buffer must be float64, "
+        if a.dtype != dtype:
+            raise TypeError(f"{name}: output buffer must be {dtype.name}, "
                             f"got {a.dtype}")
         if not a.flags.writeable:
             raise ValueError(f"{name}: output buffer is read-only")
-    elif a.dtype != np.float64:
-        a = a.astype(np.float64)
     if a.ndim == 2:
         if a.shape != (rows, cols):
             raise ValueError(f"{name}: expected shape ({rows},{cols}), "
                              f"got {a.shape}")
+        if order not in (CblasRowMajor, CblasColMajor):
+            raise ValueError(f"invalid Order flag: {order!r}")
         dense_ld = cols if order == CblasRowMajor else rows
         if ld < dense_ld:
             raise ValueError(f"{name}: ld {ld} < {dense_ld}")
+        if ld > dense_ld:
+            # A padded leading dimension is only meaningful when the
+            # 2-D array's memory really is strided that way (a view
+            # into padded storage).  A dense array with ld > dense_ld
+            # used to be accepted and silently given dense semantics —
+            # the C caller meant element (i, j) at i*ld + j, which this
+            # buffer does not contain.  Honor matching strides; raise
+            # otherwise.  Checked on the CALLER's buffer, before any
+            # read-only dtype cast (a cast copy is dense and would
+            # fail the check for perfectly valid strided inputs).
+            # With a single row (row major) / column (col major) the
+            # leading stride is never exercised, so any ld is valid.
+            it = a.itemsize
+            single = rows == 1 if order == CblasRowMajor else cols == 1
+            strided_ok = single or (
+                a.strides == (ld * it, it) if order == CblasRowMajor
+                else a.strides == (it, ld * it))
+            if not strided_ok:
+                raise ValueError(
+                    f"{name}: ld {ld} does not match the 2-D buffer's "
+                    f"memory layout (dense leading dimension {dense_ld}, "
+                    f"strides {a.strides}); pass a strided view into the "
+                    f"padded storage or ld={dense_ld}")
+        if a.dtype != dtype:
+            a = a.astype(dtype)   # read-only inputs: writable returned above
         return a
     if a.ndim != 1:
         raise ValueError(f"{name}: expected 1-D or 2-D buffer, "
                          f"got {a.ndim}-D")
+    if a.dtype != dtype:
+        a = a.astype(dtype)       # flat read-only input: cast copy is fine
     if order == CblasRowMajor:
         if ld < max(1, cols):
             raise ValueError(f"{name}: ld {ld} < n cols {cols}")
@@ -122,22 +164,93 @@ def _ctx(ctx: Optional[BlasxContext],
     return backend_context(backend)
 
 
-# =========================================================== the routines
+# ============================================= dtype-parameterized bodies
+def _gemm(dtype, order, transa, transb, m, n, k, alpha, A, lda, B, ldb,
+          beta, C, ldc, ctx, backend) -> None:
+    ta, tb = _flag(_TRANS, transa, "Trans"), _flag(_TRANS, transb, "Trans")
+    ar, ac = (m, k) if ta == "N" else (k, m)
+    br, bc = (k, n) if tb == "N" else (n, k)
+    Av = _view(A, ar, ac, lda, order, "A", dtype=dtype)
+    Bv = _view(B, br, bc, ldb, order, "B", dtype=dtype)
+    Cv = _view(C, m, n, ldc, order, "C", writable=True, dtype=dtype)
+    out = _ctx(ctx, backend).gemm(Av, Bv, Cv if beta != 0.0 else None,
+                                  alpha=alpha, beta=beta, transa=ta,
+                                  transb=tb, dtype=dtype)
+    Cv[...] = out.array()
+
+
+def _symm(dtype, order, side, uplo, m, n, alpha, A, lda, B, ldb, beta,
+          C, ldc, ctx, backend) -> None:
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A", dtype=dtype)
+    Bv = _view(B, m, n, ldb, order, "B", dtype=dtype)
+    Cv = _view(C, m, n, ldc, order, "C", writable=True, dtype=dtype)
+    out = _ctx(ctx, backend).symm(Av, Bv, Cv if beta != 0.0 else None,
+                                  alpha=alpha, beta=beta, side=sd, uplo=ul,
+                                  dtype=dtype)
+    Cv[...] = out.array()
+
+
+def _syrk(dtype, order, uplo, trans, n, k, alpha, A, lda, beta, C, ldc,
+          ctx, backend) -> None:
+    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
+    ar, ac = (n, k) if tr == "N" else (k, n)
+    Av = _view(A, ar, ac, lda, order, "A", dtype=dtype)
+    Cv = _view(C, n, n, ldc, order, "C", writable=True, dtype=dtype)
+    # BLAS syrk always reads C's uplo triangle (beta scales it), so seed
+    # the context call with Cv even for beta == 0 to preserve the
+    # untouched opposite triangle in the writeback.
+    out = _ctx(ctx, backend).syrk(Av, Cv, alpha=alpha, beta=beta, uplo=ul,
+                                  trans=tr, dtype=dtype)
+    Cv[...] = out.array()
+
+
+def _syr2k(dtype, order, uplo, trans, n, k, alpha, A, lda, B, ldb, beta,
+           C, ldc, ctx, backend) -> None:
+    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
+    ar, ac = (n, k) if tr == "N" else (k, n)
+    Av = _view(A, ar, ac, lda, order, "A", dtype=dtype)
+    Bv = _view(B, ar, ac, ldb, order, "B", dtype=dtype)
+    Cv = _view(C, n, n, ldc, order, "C", writable=True, dtype=dtype)
+    out = _ctx(ctx, backend).syr2k(Av, Bv, Cv, alpha=alpha, beta=beta,
+                                   uplo=ul, trans=tr, dtype=dtype)
+    Cv[...] = out.array()
+
+
+def _trmm(dtype, order, side, uplo, transa, diag, m, n, alpha, A, lda,
+          B, ldb, ctx, backend) -> None:
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A", dtype=dtype)
+    Bv = _view(B, m, n, ldb, order, "B", writable=True, dtype=dtype)
+    out = _ctx(ctx, backend).trmm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+                                  transa=ta, diag=dg, dtype=dtype)
+    Bv[...] = out.array()
+
+
+def _trsm(dtype, order, side, uplo, transa, diag, m, n, alpha, A, lda,
+          B, ldb, ctx, backend) -> None:
+    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
+    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
+    ka = m if sd == "L" else n
+    Av = _view(A, ka, ka, lda, order, "A", dtype=dtype)
+    Bv = _view(B, m, n, ldb, order, "B", writable=True, dtype=dtype)
+    out = _ctx(ctx, backend).trsm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
+                                  transa=ta, diag=dg, dtype=dtype)
+    Bv[...] = out.array()
+
+
+# ================================================ double-precision surface
 def cblas_dgemm(order, transa, transb, m: int, n: int, k: int,
                 alpha: float, A, lda: int, B, ldb: int,
                 beta: float, C, ldc: int, *,
                 ctx: Optional[BlasxContext] = None,
                 backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(B) + beta*C  (C is m x n, updated in place)."""
-    ta, tb = _flag(_TRANS, transa, "Trans"), _flag(_TRANS, transb, "Trans")
-    ar, ac = (m, k) if ta == "N" else (k, m)
-    br, bc = (k, n) if tb == "N" else (n, k)
-    Av = _view(A, ar, ac, lda, order, "A")
-    Bv = _view(B, br, bc, ldb, order, "B")
-    Cv = _view(C, m, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx, backend).gemm(Av, Bv, Cv if beta != 0.0 else None,
-                         alpha=alpha, beta=beta, transa=ta, transb=tb)
-    Cv[...] = out.array()
+    _gemm(np.float64, order, transa, transb, m, n, k, alpha, A, lda,
+          B, ldb, beta, C, ldc, ctx, backend)
 
 
 def cblas_dsymm(order, side, uplo, m: int, n: int, alpha: float,
@@ -146,14 +259,8 @@ def cblas_dsymm(order, side, uplo, m: int, n: int, alpha: float,
                 backend: Optional[str] = None) -> None:
     """C := alpha*A*B + beta*C (Left) or alpha*B*A + beta*C (Right),
     A symmetric with the ``uplo`` triangle stored."""
-    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
-    ka = m if sd == "L" else n
-    Av = _view(A, ka, ka, lda, order, "A")
-    Bv = _view(B, m, n, ldb, order, "B")
-    Cv = _view(C, m, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx, backend).symm(Av, Bv, Cv if beta != 0.0 else None,
-                         alpha=alpha, beta=beta, side=sd, uplo=ul)
-    Cv[...] = out.array()
+    _symm(np.float64, order, side, uplo, m, n, alpha, A, lda, B, ldb,
+          beta, C, ldc, ctx, backend)
 
 
 def cblas_dsyrk(order, uplo, trans, n: int, k: int, alpha: float,
@@ -161,30 +268,17 @@ def cblas_dsyrk(order, uplo, trans, n: int, k: int, alpha: float,
                 ctx: Optional[BlasxContext] = None,
                 backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(A)^T + beta*C on the ``uplo`` triangle."""
-    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
-    ar, ac = (n, k) if tr == "N" else (k, n)
-    Av = _view(A, ar, ac, lda, order, "A")
-    Cv = _view(C, n, n, ldc, order, "C", writable=True)
-    # BLAS syrk always reads C's uplo triangle (beta scales it), so seed
-    # the context call with Cv even for beta == 0 to preserve the
-    # untouched opposite triangle in the writeback.
-    out = _ctx(ctx, backend).syrk(Av, Cv, alpha=alpha, beta=beta, uplo=ul, trans=tr)
-    Cv[...] = out.array()
+    _syrk(np.float64, order, uplo, trans, n, k, alpha, A, lda, beta,
+          C, ldc, ctx, backend)
 
 
 def cblas_dsyr2k(order, uplo, trans, n: int, k: int, alpha: float,
                  A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
                  ctx: Optional[BlasxContext] = None,
-                backend: Optional[str] = None) -> None:
+                 backend: Optional[str] = None) -> None:
     """C := alpha*op(A)*op(B)^T + alpha*op(B)*op(A)^T + beta*C."""
-    ul, tr = _flag(_UPLO, uplo, "Uplo"), _flag(_TRANS, trans, "Trans")
-    ar, ac = (n, k) if tr == "N" else (k, n)
-    Av = _view(A, ar, ac, lda, order, "A")
-    Bv = _view(B, ar, ac, ldb, order, "B")
-    Cv = _view(C, n, n, ldc, order, "C", writable=True)
-    out = _ctx(ctx, backend).syr2k(Av, Bv, Cv, alpha=alpha, beta=beta,
-                          uplo=ul, trans=tr)
-    Cv[...] = out.array()
+    _syr2k(np.float64, order, uplo, trans, n, k, alpha, A, lda, B, ldb,
+           beta, C, ldc, ctx, backend)
 
 
 def cblas_dtrmm(order, side, uplo, transa, diag, m: int, n: int,
@@ -193,14 +287,8 @@ def cblas_dtrmm(order, side, uplo, transa, diag, m: int, n: int,
                 backend: Optional[str] = None) -> None:
     """B := alpha*op(tri(A))*B (Left) or alpha*B*op(tri(A)) (Right),
     B (m x n) updated in place."""
-    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
-    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
-    ka = m if sd == "L" else n
-    Av = _view(A, ka, ka, lda, order, "A")
-    Bv = _view(B, m, n, ldb, order, "B", writable=True)
-    out = _ctx(ctx, backend).trmm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
-                         transa=ta, diag=dg)
-    Bv[...] = out.array()
+    _trmm(np.float64, order, side, uplo, transa, diag, m, n, alpha,
+          A, lda, B, ldb, ctx, backend)
 
 
 def cblas_dtrsm(order, side, uplo, transa, diag, m: int, n: int,
@@ -209,11 +297,62 @@ def cblas_dtrsm(order, side, uplo, transa, diag, m: int, n: int,
                 backend: Optional[str] = None) -> None:
     """Solve op(tri(A))*X = alpha*B (Left) or X*op(tri(A)) = alpha*B
     (Right); X overwrites B (m x n) in place."""
-    sd, ul = _flag(_SIDE, side, "Side"), _flag(_UPLO, uplo, "Uplo")
-    ta, dg = _flag(_TRANS, transa, "Trans"), _flag(_DIAG, diag, "Diag")
-    ka = m if sd == "L" else n
-    Av = _view(A, ka, ka, lda, order, "A")
-    Bv = _view(B, m, n, ldb, order, "B", writable=True)
-    out = _ctx(ctx, backend).trsm(Av, Bv, alpha=alpha, side=sd, uplo=ul,
-                         transa=ta, diag=dg)
-    Bv[...] = out.array()
+    _trsm(np.float64, order, side, uplo, transa, diag, m, n, alpha,
+          A, lda, B, ldb, ctx, backend)
+
+
+# ================================================ single-precision surface
+def cblas_sgemm(order, transa, transb, m: int, n: int, k: int,
+                alpha: float, A, lda: int, B, ldb: int,
+                beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
+    """Single-precision GEMM: C := alpha*op(A)*op(B) + beta*C, all
+    buffers float32, C updated in place."""
+    _gemm(np.float32, order, transa, transb, m, n, k, alpha, A, lda,
+          B, ldb, beta, C, ldc, ctx, backend)
+
+
+def cblas_ssymm(order, side, uplo, m: int, n: int, alpha: float,
+                A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
+    """Single-precision SYMM (see :func:`cblas_dsymm`)."""
+    _symm(np.float32, order, side, uplo, m, n, alpha, A, lda, B, ldb,
+          beta, C, ldc, ctx, backend)
+
+
+def cblas_ssyrk(order, uplo, trans, n: int, k: int, alpha: float,
+                A, lda: int, beta: float, C, ldc: int, *,
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
+    """Single-precision SYRK (see :func:`cblas_dsyrk`)."""
+    _syrk(np.float32, order, uplo, trans, n, k, alpha, A, lda, beta,
+          C, ldc, ctx, backend)
+
+
+def cblas_ssyr2k(order, uplo, trans, n: int, k: int, alpha: float,
+                 A, lda: int, B, ldb: int, beta: float, C, ldc: int, *,
+                 ctx: Optional[BlasxContext] = None,
+                 backend: Optional[str] = None) -> None:
+    """Single-precision SYR2K (see :func:`cblas_dsyr2k`)."""
+    _syr2k(np.float32, order, uplo, trans, n, k, alpha, A, lda, B, ldb,
+           beta, C, ldc, ctx, backend)
+
+
+def cblas_strmm(order, side, uplo, transa, diag, m: int, n: int,
+                alpha: float, A, lda: int, B, ldb: int, *,
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
+    """Single-precision TRMM (see :func:`cblas_dtrmm`)."""
+    _trmm(np.float32, order, side, uplo, transa, diag, m, n, alpha,
+          A, lda, B, ldb, ctx, backend)
+
+
+def cblas_strsm(order, side, uplo, transa, diag, m: int, n: int,
+                alpha: float, A, lda: int, B, ldb: int, *,
+                ctx: Optional[BlasxContext] = None,
+                backend: Optional[str] = None) -> None:
+    """Single-precision TRSM (see :func:`cblas_dtrsm`)."""
+    _trsm(np.float32, order, side, uplo, transa, diag, m, n, alpha,
+          A, lda, B, ldb, ctx, backend)

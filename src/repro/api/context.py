@@ -45,6 +45,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..core import task as taskmod
+from ..core.dtypes import (SUPPORTED_DTYPES, promote_dtypes,
+                           validate_backend_dtype)
 from ..core.runtime import BlasxRuntime, RuntimeConfig
 from ..core.tiling import TiledMatrix
 from .futures import BlasFuture, SerialExecutor
@@ -61,8 +63,8 @@ ArrayLike = Union[np.ndarray, "MatrixHandle"]
 _MATRIX_IDS = itertools.count()
 
 
-def _as2d(x, name: str) -> np.ndarray:
-    a = np.asarray(x)
+def _as2d(x, name: str, dtype=None) -> np.ndarray:
+    a = np.asarray(x) if dtype is None else np.asarray(x, dtype=dtype)
     if a.ndim != 2:
         raise ValueError(f"{name} must be 2-D, got shape {a.shape}")
     return a
@@ -95,6 +97,11 @@ class MatrixHandle:
     @property
     def tile(self) -> int:
         return self._tiled.grid.tile
+
+    @property
+    def dtype(self) -> np.dtype:
+        """Storage precision of the handle (and of its cached tiles)."""
+        return self._tiled.data.dtype
 
     @property
     def tiled(self) -> TiledMatrix:
@@ -155,6 +162,16 @@ class BlasxContext:
         overrides ``config.backend``.  With ``runtime=`` it must match
         the adopted runtime's backend (a runtime's backend is fixed at
         construction).
+    dtype:
+        Default storage/compute precision for the context.  When set,
+        :meth:`tile` and the routines cast raw-array operands to it
+        and outputs are produced in it; tile byte sizes (ALRU/heap
+        capacity, MESI-X transfer ledger, comm model) follow the
+        storage dtype.  ``float64``/``float32`` run on every backend;
+        ``float16``/``bfloat16`` need the jax or pallas backend (the
+        engines accumulate them in float32).  ``None`` (default)
+        preserves the legacy promote-from-inputs behaviour.  Each
+        routine also takes a per-call ``dtype=`` that overrides this.
 
     The context is a context manager; :meth:`close` shuts down the
     async executor and drops all cached tiles.  All methods are
@@ -166,7 +183,8 @@ class BlasxContext:
     def __init__(self, config: Optional[RuntimeConfig] = None, *,
                  runtime: Optional[BlasxRuntime] = None,
                  tile: int = DEFAULT_TILE,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 dtype=None):
         if backend is not None:
             if runtime is not None:
                 if runtime.cfg.backend != backend:
@@ -183,6 +201,10 @@ class BlasxContext:
             config or RuntimeConfig(n_devices=1, mode="sim"))
         self.cfg = self.runtime.cfg
         self.tile_size = tile
+        # fail fast: an unsupported (dtype, backend) pair is a config
+        # error, not something to surface on the first routine call
+        self.dtype = (validate_backend_dtype(dtype, self.cfg.backend)
+                      if dtype is not None else None)
         self.calls: List[CallRecord] = []   # last MAX_CALL_RECORDS only
         self.n_calls = 0                    # lifetime count
         self._lock = threading.RLock()
@@ -224,41 +246,79 @@ class BlasxContext:
         if self._closed:
             raise RuntimeError("BlasxContext is closed")
 
+    def _resolve_dtype(self, dtype) -> Optional[np.dtype]:
+        """Per-call ``dtype=`` beats the context default; ``None`` when
+        neither is set (legacy promote-from-inputs).  Validated against
+        the execution backend (half precisions are jax/pallas-only)."""
+        if dtype is None:
+            return self.dtype
+        return validate_backend_dtype(dtype, self.cfg.backend)
+
     # ------------------------------------------------------------- handles
-    def tile(self, data, tile: Optional[int] = None) -> MatrixHandle:
+    def tile(self, data, tile: Optional[int] = None,
+             dtype=None) -> MatrixHandle:
         """Register a host matrix and return its device-resident handle.
 
         Tiles fetched during later calls stay in the runtime's L1/L2
         caches keyed by this handle's unique ``matrix_id`` — reusing
-        the handle is what turns repeat traffic into cache hits."""
+        the handle is what turns repeat traffic into cache hits.
+
+        ``dtype`` (or the context default) casts the data on
+        registration; the handle then stores — and its tiles are
+        cached/transferred at — that precision.  Validated against the
+        backend up front: registering tiles at a precision the engine
+        can never execute is a config error.  Re-registering an
+        existing handle only enforces a dtype that was passed
+        explicitly — a handle deliberately tiled at a non-default
+        precision stays adoptable under the context default."""
         self._check_open()
+        dt = self._resolve_dtype(dtype)
         if isinstance(data, MatrixHandle):
-            return self._adopt(data)
-        a = _as2d(data, "matrix")
+            return self._adopt(data, dt if dtype is not None else None,
+                               "matrix")
+        a = _as2d(data, "matrix", dt)
         mid = f"M{next(_MATRIX_IDS)}"
         return MatrixHandle(self, TiledMatrix(mid, a, tile or self.tile_size))
 
-    def _adopt(self, h: MatrixHandle) -> MatrixHandle:
+    def _adopt(self, h: MatrixHandle, dtype=None,
+               name: str = "matrix") -> MatrixHandle:
         if h._ctx is not self:
             raise ValueError(
                 f"handle {h.matrix_id} belongs to a different context; "
                 "tile caches do not transfer between contexts")
+        if dtype is not None and h.array().dtype != dtype:
+            # a handle owns its storage; recasting behind the caller's
+            # back would silently decouple it from its cached tiles
+            raise ValueError(
+                f"{name}: handle {h.matrix_id} is {h.array().dtype}, "
+                f"call requested dtype {np.dtype(dtype).name}; re-tile "
+                "the data at the desired precision")
         return h
 
     def _coerce(self, x: ArrayLike, name: str, tile: Optional[int],
-                ephemeral: List["MatrixHandle"]) -> MatrixHandle:
+                ephemeral: List["MatrixHandle"],
+                dtype: Optional[np.dtype] = None,
+                strict: bool = False) -> MatrixHandle:
         """Handle passthrough; raw arrays are tiled fresh (cold) and
         recorded in ``ephemeral`` — their matrix id is unique to this
         one call, so any tiles they leave in the caches could never be
         hit again and are dropped right after the run (keeps legacy
-        per-call traffic from squatting on cache capacity)."""
+        per-call traffic from squatting on cache capacity).  ``dtype``
+        casts raw arrays; handles must already match it only when
+        ``strict`` (an explicit per-call ``dtype=``) — a handle tiled
+        at a non-default precision stays usable under the context
+        default (its tiles are cached at its own dtype; only the
+        output follows the default)."""
         if isinstance(x, MatrixHandle):
             if tile is not None and x.tile != tile:
                 raise ValueError(
                     f"{name}: handle tile {x.tile} != requested tile {tile}")
-            return self._adopt(x)
-        a = _as2d(x, name)
-        h = self.tile(a, tile or self.tile_size)
+            return self._adopt(x, dtype if strict else None, name)
+        a = _as2d(x, name, dtype)
+        # pass the resolved dtype through: tile() would otherwise
+        # re-resolve against the context default and recast a per-call
+        # dtype= override (None stays None -> tile applies the default)
+        h = self.tile(a, tile or self.tile_size, dtype=dtype)
         ephemeral.append(h)
         return h
 
@@ -385,14 +445,16 @@ class BlasxContext:
     def gemm(self, A: ArrayLike, B: ArrayLike, C: Optional[ArrayLike] = None,
              *, alpha: float = 1.0, beta: float = 0.0,
              transa: str = "N", transb: str = "N",
-             tile: Optional[int] = None) -> MatrixHandle:
+             tile: Optional[int] = None, dtype=None) -> MatrixHandle:
         """C = alpha * op(A) @ op(B) + beta * C   (Eq. 1a)."""
         self._check_open()
         transa, transb = transa.upper()[0], transb.upper()[0]
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
-            Bh = self._coerce(B, "B", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
+            Bh = self._coerce(B, "B", tile, eph, dt, strict)
             self._check_tiles(Ah, Bh)
             t = Ah.tile
             m = Ah.shape[0] if transa == "N" else Ah.shape[1]
@@ -401,8 +463,11 @@ class BlasxContext:
             n = Bh.shape[1] if transb == "N" else Bh.shape[0]
             if k != kb:
                 raise ValueError(f"inner dims mismatch: {k} vs {kb}")
-            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
-            out = self._prep_c(C, (m, n), t, dtype, beta)
+            out_dt = dt if dt is not None else promote_dtypes(
+                Ah.array().dtype, Bh.array().dtype)
+            self._check_exec_dtype(out_dt, Ah.dtype, Bh.dtype)
+            out = self._prep_c(C, (m, n), t, out_dt, beta,
+                               force=dt is not None)
             tasks = taskmod.taskize_gemm(Ah.tiled.grid, Bh.tiled.grid,
                                          out.tiled.grid, transa, transb,
                                          alpha, beta)
@@ -412,15 +477,21 @@ class BlasxContext:
 
     def syrk(self, A: ArrayLike, C: Optional[ArrayLike] = None, *,
              alpha: float = 1.0, beta: float = 0.0, uplo: str = "U",
-             trans: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+             trans: str = "N", tile: Optional[int] = None,
+             dtype=None) -> MatrixHandle:
         """C = alpha * op(A) @ op(A)^T + beta * C, uplo triangle (Eq. 1b)."""
         self._check_open()
         trans = trans.upper()[0]
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
             n = Ah.shape[0] if trans == "N" else Ah.shape[1]
-            out = self._prep_c(C, (n, n), Ah.tile, Ah.array().dtype, beta)
+            out_dt = dt if dt is not None else Ah.array().dtype
+            self._check_exec_dtype(out_dt, Ah.dtype)
+            out = self._prep_c(C, (n, n), Ah.tile, out_dt, beta,
+                               force=dt is not None)
             tasks = taskmod.taskize_syrk(Ah.tiled.grid, out.tiled.grid,
                                          uplo, trans, alpha, beta)
             mats = {h.matrix_id: h.tiled for h in (Ah, out)}
@@ -430,18 +501,23 @@ class BlasxContext:
     def syr2k(self, A: ArrayLike, B: ArrayLike,
               C: Optional[ArrayLike] = None, *, alpha: float = 1.0,
               beta: float = 0.0, uplo: str = "U", trans: str = "N",
-              tile: Optional[int] = None) -> MatrixHandle:
+              tile: Optional[int] = None, dtype=None) -> MatrixHandle:
         """C = alpha*(op(A)op(B)^T + op(B)op(A)^T) + beta*C (Eq. 1e)."""
         self._check_open()
         trans = trans.upper()[0]
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
-            Bh = self._coerce(B, "B", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
+            Bh = self._coerce(B, "B", tile, eph, dt, strict)
             self._check_tiles(Ah, Bh)
             n = Ah.shape[0] if trans == "N" else Ah.shape[1]
-            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
-            out = self._prep_c(C, (n, n), Ah.tile, dtype, beta)
+            out_dt = dt if dt is not None else promote_dtypes(
+                Ah.array().dtype, Bh.array().dtype)
+            self._check_exec_dtype(out_dt, Ah.dtype, Bh.dtype)
+            out = self._prep_c(C, (n, n), Ah.tile, out_dt, beta,
+                               force=dt is not None)
             tasks = taskmod.taskize_syr2k(Ah.tiled.grid, Bh.tiled.grid,
                                           out.tiled.grid, uplo, trans,
                                           alpha, beta)
@@ -452,33 +528,47 @@ class BlasxContext:
     def symm(self, A: ArrayLike, B: ArrayLike,
              C: Optional[ArrayLike] = None, *, alpha: float = 1.0,
              beta: float = 0.0, side: str = "L", uplo: str = "U",
-             tile: Optional[int] = None) -> MatrixHandle:
+             tile: Optional[int] = None, dtype=None) -> MatrixHandle:
         """C = alpha * sym(A) @ B + beta * C (side='L'; Eq. 1f).
 
         ``side='R'`` reduces to the left-side tile algorithm via the
         §III-C transpose identity; it operates on transposed host
-        copies, so cache reuse applies within — not across — the call.
+        copies, so cache reuse applies within — not across — the call,
+        and the copies are coerced like raw arrays: a context default
+        dtype applies to them (a handle's storage precision is only
+        preserved on ``side='L'``; pass an explicit per-call ``dtype=``
+        to pin the precision on either side).
         """
         self._check_open()
         side = side.upper()[0]
         if side == "R":
+            # same handle-ownership/dtype rules as side='L' before the
+            # operands degrade to raw transposed copies.  C is exempt
+            # on both sides: it only seeds the output (cast freely),
+            # it never becomes a cached-tile operand.
+            self._check_side_r_handles(dtype, A=A, B=B)
             # C = alpha*B*A + beta*C  ==  (alpha*A*B^T + beta*C^T)^T
             Bt = np.ascontiguousarray(_array_of(B).T)
             Ct = None if C is None else \
                 np.ascontiguousarray(_as2d(_array_of(C), "C").T)
             out = self.symm(_array_of(A), Bt, Ct, alpha=alpha, beta=beta,
-                            side="L", uplo=uplo, tile=tile)
+                            side="L", uplo=uplo, tile=tile, dtype=dtype)
             return self._transposed_result(out)
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
-            Bh = self._coerce(B, "B", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
+            Bh = self._coerce(B, "B", tile, eph, dt, strict)
             self._check_tiles(Ah, Bh)
             m, n = Bh.shape
             if Ah.shape != (m, m):
                 raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
-            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
-            out = self._prep_c(C, (m, n), Ah.tile, dtype, beta)
+            out_dt = dt if dt is not None else promote_dtypes(
+                Ah.array().dtype, Bh.array().dtype)
+            self._check_exec_dtype(out_dt, Ah.dtype, Bh.dtype)
+            out = self._prep_c(C, (m, n), Ah.tile, out_dt, beta,
+                               force=dt is not None)
             tasks = taskmod.taskize_symm(Ah.tiled.grid, Bh.tiled.grid,
                                          out.tiled.grid, uplo, alpha, beta)
             mats = {h.matrix_id: h.tiled for h in (Ah, Bh, out)}
@@ -487,29 +577,36 @@ class BlasxContext:
 
     def trmm(self, A: ArrayLike, B: ArrayLike, *, alpha: float = 1.0,
              side: str = "L", uplo: str = "U", transa: str = "N",
-             diag: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+             diag: str = "N", tile: Optional[int] = None,
+             dtype=None) -> MatrixHandle:
         """B := alpha * op(tri(A)) @ B (side='L'; Eq. 1d), returned as a
         new handle (functional, B is not overwritten)."""
         self._check_open()
         side = side.upper()[0]
         if side == "R":
+            self._check_side_r_handles(dtype, A=A, B=B)
             # B*op(A) == (op(A)^T B^T)^T — §III-C at matrix granularity
             flip = "T" if transa.upper()[0] == "N" else "N"
             out = self.trmm(_array_of(A),
                             np.ascontiguousarray(_array_of(B).T),
                             alpha=alpha, side="L", uplo=uplo, transa=flip,
-                            diag=diag, tile=tile)
+                            diag=diag, tile=tile, dtype=dtype)
             return self._transposed_result(out)
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
-            Bh = self._coerce(B, "B", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
+            Bh = self._coerce(B, "B", tile, eph, dt, strict)
             self._check_tiles(Ah, Bh)
             m, n = Bh.shape
             if Ah.shape != (m, m):
                 raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
-            # legacy semantics: TRMM's result keeps B's dtype
-            out = self._fresh_out(m, n, Ah.tile, Bh.array().dtype)
+            # legacy semantics: TRMM's result keeps B's dtype (unless an
+            # explicit dtype= pinned the call's precision)
+            out_dt = dt if dt is not None else Bh.array().dtype
+            self._check_exec_dtype(out_dt, Ah.dtype, Bh.dtype)
+            out = self._fresh_out(m, n, Ah.tile, out_dt)
             # B's tiles are the taskization's Cin inputs: a reused handle
             # serves them straight from the warm cache.
             tasks = taskmod.taskize_trmm(Ah.tiled.grid, Bh.tiled.grid,
@@ -521,28 +618,34 @@ class BlasxContext:
 
     def trsm(self, A: ArrayLike, B: ArrayLike, *, alpha: float = 1.0,
              side: str = "L", uplo: str = "U", transa: str = "N",
-             diag: str = "N", tile: Optional[int] = None) -> MatrixHandle:
+             diag: str = "N", tile: Optional[int] = None,
+             dtype=None) -> MatrixHandle:
         """Solve op(tri(A)) @ X = alpha * B (side='L'; Eq. 1c); returns X."""
         self._check_open()
         side = side.upper()[0]
         if side == "R":
+            self._check_side_r_handles(dtype, A=A, B=B)
             # X*op(A) = alpha*B  ==  op(A)^T X^T = alpha B^T
             flip = "T" if transa.upper()[0] == "N" else "N"
             out = self.trsm(_array_of(A),
                             np.ascontiguousarray(_array_of(B).T),
                             alpha=alpha, side="L", uplo=uplo, transa=flip,
-                            diag=diag, tile=tile)
+                            diag=diag, tile=tile, dtype=dtype)
             return self._transposed_result(out)
+        dt = self._resolve_dtype(dtype)
+        strict = dtype is not None
         with self._lock:
             eph: List[MatrixHandle] = []
-            Ah = self._coerce(A, "A", tile, eph)
-            Bh = self._coerce(B, "B", tile, eph)
+            Ah = self._coerce(A, "A", tile, eph, dt, strict)
+            Bh = self._coerce(B, "B", tile, eph, dt, strict)
             self._check_tiles(Ah, Bh)
             m, n = Bh.shape
             if Ah.shape != (m, m):
                 raise ValueError(f"A must be ({m},{m}), got {Ah.shape}")
-            dtype = np.promote_types(Ah.array().dtype, Bh.array().dtype)
-            out = self._fresh_out(m, n, Ah.tile, dtype)
+            out_dt = dt if dt is not None else promote_dtypes(
+                Ah.array().dtype, Bh.array().dtype)
+            self._check_exec_dtype(out_dt, Ah.dtype, Bh.dtype)
+            out = self._fresh_out(m, n, Ah.tile, out_dt)
             tasks = taskmod.taskize_trsm(Ah.tiled.grid, Bh.tiled.grid,
                                          out.tiled.grid, uplo, transa,
                                          diag, alpha)
@@ -555,22 +658,52 @@ class BlasxContext:
                      Cs: Optional[Sequence[ArrayLike]] = None, *,
                      alpha: float = 1.0, beta: float = 0.0,
                      transa: str = "N", transb: str = "N",
-                     tile: Optional[int] = None) -> List[MatrixHandle]:
+                     tile: Optional[int] = None,
+                     dtype=None) -> List[MatrixHandle]:
         """Pointer-array style batch (cublasDgemmBatched analogue)."""
         from .batch import gemm_batched
         return gemm_batched(self, As, Bs, Cs, alpha=alpha, beta=beta,
-                            transa=transa, transb=transb, tile=tile)
+                            transa=transa, transb=transb, tile=tile,
+                            dtype=dtype)
 
     def gemm_strided_batched(self, A, B, C=None, *, alpha: float = 1.0,
                              beta: float = 0.0, transa: str = "N",
                              transb: str = "N",
-                             tile: Optional[int] = None) -> np.ndarray:
+                             tile: Optional[int] = None,
+                             dtype=None) -> np.ndarray:
         """3-D strided batch (cublasDgemmStridedBatched analogue)."""
         from .batch import gemm_strided_batched
         return gemm_strided_batched(self, A, B, C, alpha=alpha, beta=beta,
-                                    transa=transa, transb=transb, tile=tile)
+                                    transa=transa, transb=transb, tile=tile,
+                                    dtype=dtype)
 
     # ------------------------------------------------------------- helpers
+    def _check_side_r_handles(self, dtype, **operands) -> None:
+        """side='R' reductions degrade handles to raw transposed
+        copies; enforce the same ownership and dtype-mismatch rules
+        the side='L' coercion path applies, so both sides reject an
+        explicit ``dtype=`` that contradicts a handle's storage instead
+        of silently recasting.  Like side='L', the context default is
+        not enforced against handles — only a per-call override is."""
+        dt = self._resolve_dtype(dtype) if dtype is not None else None
+        for name, x in operands.items():
+            if isinstance(x, MatrixHandle):
+                self._adopt(x, dt, name)
+
+    def _check_exec_dtype(self, *dts) -> None:
+        """Gate inferred dtypes — the output AND every input's storage
+        dtype (a half-precision operand crawls through the engine even
+        when promotion widens the output) — against the backend.  Only
+        registry dtypes with a restricted backend set are checked
+        (currently the half precisions, jax/pallas-only —
+        ``repro.core.dtypes`` is the source of truth); anything
+        outside the registry — legacy exotic dtypes numpy happens to
+        promote to — keeps the pre-multi-precision behaviour."""
+        for dt in dts:
+            allowed = SUPPORTED_DTYPES.get(np.dtype(dt).name)
+            if allowed is not None and self.cfg.backend not in allowed:
+                validate_backend_dtype(dt, self.cfg.backend)  # raises
+
     @staticmethod
     def _check_tiles(*handles: "MatrixHandle") -> None:
         tiles = {h.tile for h in handles}
@@ -581,13 +714,22 @@ class BlasxContext:
     def _transposed_result(self, out: MatrixHandle) -> MatrixHandle:
         """§III-C side='R' epilogue: re-tile the transposed result and
         drop the intermediate handle's cached tiles — the caller never
-        sees it, so they could only ever be dead weight."""
-        res = self.tile(np.ascontiguousarray(out.array().T), out.tile)
+        sees it, so they could only ever be dead weight.
+
+        The handle is built directly (like :meth:`_fresh_out`): the
+        left-side call already resolved and validated the output dtype,
+        and ``tile(dtype=arr.dtype)`` would re-validate it against the
+        registry — rejecting legacy exotic result dtypes (e.g. integer
+        inputs promoted by the left-side call) that this epilogue must
+        preserve as-is."""
+        arr = np.ascontiguousarray(out.array().T)
+        mid = f"M{next(_MATRIX_IDS)}"
+        res = MatrixHandle(self, TiledMatrix(mid, arr, out.tile))
         out.invalidate()
         return res
 
     def _prep_c(self, C: Optional[ArrayLike], shape, tile: int, dtype,
-                beta: float) -> MatrixHandle:
+                beta: float, force: bool = False) -> MatrixHandle:
         if C is None:
             if beta != 0.0:
                 raise ValueError("beta != 0 requires C")
@@ -595,8 +737,16 @@ class BlasxContext:
         c = _as2d(_array_of(C), "C")
         if c.shape != shape:
             raise ValueError(f"C shape {c.shape} != {shape}")
+        if force:
+            # explicit dtype= call: the requested precision wins (C is
+            # cast into the output seed; dtype was validated upstream)
+            return self._fresh_out(shape[0], shape[1], tile, dtype, seed=c)
         # legacy semantics: the output keeps C's dtype (the runtime
-        # downcasts each written tile via astype)
+        # downcasts each written tile via astype).  C's dtype IS the
+        # real output dtype here, so it — not the promoted out_dt the
+        # call site checked — must pass the backend gate: a bf16 C
+        # would otherwise put half-precision tiles through the engine.
+        self._check_exec_dtype(c.dtype)
         return self._fresh_out(shape[0], shape[1], tile, c.dtype, seed=c)
 
 

@@ -13,12 +13,19 @@ abstract ``(G, steps, m, k, n, dtype)`` signature, so recurring tile
 shapes (the common case: every full tile of a matrix shares one
 shape) hit warm compiled executables.
 
-Dtype handling: accumulation runs at the engine's best precision
-(float64 only when ``jax_enable_x64`` is on — default CPU jax computes
-in float32) and the result is cast back to the group's promoted dtype,
-so callers always get the dtype contract of the numpy engine; float64
-workloads on a 32-bit-configured jax trade precision, which is why the
-parity suite pins float32 inputs.
+Dtype handling (multi-precision contract, see ``repro.core.dtypes``):
+tiles are staged in the group's *storage* dtype — float32 groups move
+half the bytes of float64, bfloat16/float16 a quarter — and the
+contraction accumulates at the engine's best precision: float64 only
+when ``jax_enable_x64`` is on (default CPU jax computes in float32);
+float32 for every narrower storage dtype (the MXU-canonical f32
+accumulation for bf16/f16 inputs).  The result is cast back to the
+group's promoted storage dtype, so callers always get the dtype
+contract of the numpy engine.  ``jax.jit`` keys its compile cache on
+the abstract ``(shape, dtype)`` signature, so every storage precision
+gets its own specialized executable.  Float64 workloads on a
+32-bit-configured jax trade precision, which is why the parity suite
+pins float32 inputs.
 """
 from __future__ import annotations
 
@@ -43,6 +50,8 @@ def _group_contract():
         n = b.shape[-1]
         a2 = jnp.transpose(a, (0, 2, 1, 3)).reshape(g, m, s * k)
         b2 = b.reshape(g, s * k, n)
+        # f32 accumulation for every sub-f64 storage dtype (f32, bf16,
+        # f16); the caller casts back to the storage dtype afterwards
         pref = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
         return jnp.matmul(a2, b2, preferred_element_type=pref)
 
@@ -50,8 +59,10 @@ def _group_contract():
 
 
 def engine_dtype(want: str) -> str:
-    """The dtype the XLA engine will actually compute in: float64 only
-    when jax runs in x64 mode, float32 otherwise (see module doc).
+    """The *staging* dtype for a storage dtype: float64 narrows to
+    float32 when jax runs without x64 (see module doc); float32 and
+    the half precisions stage as-is — low-precision groups keep their
+    small byte footprint and widen only inside the MXU/accumulator.
     Deliberately uncached — ``jax_enable_x64`` can be toggled at
     runtime and must be re-read per dispatch."""
     if want == "float64":

@@ -6,6 +6,11 @@ original k order (bitwise identical to the seed engine).  This is the
 baseline the batched JAX/Pallas backends are measured against
 (``kernel_launches == batched_steps`` on its ledger), and the
 numerically-authoritative engine the parity suite compares to.
+
+Precisions: float64 and float32, computed in the storage dtype (host
+BLAS).  The half precisions (float16/bfloat16) are rejected upstream
+by ``repro.core.dtypes`` — numpy has no fast kernels for them, so
+they are jax/pallas-only.
 """
 from __future__ import annotations
 

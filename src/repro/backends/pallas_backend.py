@@ -7,7 +7,11 @@ was built for: each item's k-chain folds into one
 chosen by ``kernels.ops`` — and the group runs as one vmapped
 ``pallas_call`` dispatch.  A shape-keyed cache holds the jitted
 batched kernels so each (steps, tile, dtype) signature compiles once
-per process.
+per process — every storage precision (f64/f32/bf16/f16) gets its own
+compiled kernel, and the kernel's VMEM accumulator is float32
+regardless of storage dtype (``preferred_element_type`` in
+``kernels.matmul``), which is the f32-accumulation contract for
+low-precision inputs.
 
 Everything else (triangular/symmetric fills, mixed-signature tasks
 split into single steps by the runtime) falls back to the batched

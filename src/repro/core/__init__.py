@@ -9,6 +9,8 @@ dependency on the api package (which itself imports core modules).
 """
 from .blas3 import (gemm, ref_gemm, ref_symm, ref_syr2k, ref_syrk, ref_trmm,
                     ref_trsm, symm, syr2k, syrk, trmm, trsm)
+from .dtypes import (SUPPORTED_DTYPES, canonical_dtype, promote_dtypes,
+                     validate_backend_dtype)
 from .runtime import BlasxRuntime, RuntimeConfig
 from .tiling import TiledMatrix, TileGrid, TileKey, degree_of_parallelism
 
@@ -20,6 +22,8 @@ __all__ = [
     "ref_gemm", "ref_syrk", "ref_syr2k", "ref_symm", "ref_trmm", "ref_trsm",
     "BlasxRuntime", "RuntimeConfig",
     "TiledMatrix", "TileGrid", "TileKey", "degree_of_parallelism",
+    "SUPPORTED_DTYPES", "canonical_dtype", "promote_dtypes",
+    "validate_backend_dtype",
     *_API_NAMES,
 ]
 

@@ -80,8 +80,11 @@ class Alru:
         blocks as needed) and returned with ``fresh`` semantics: the
         caller must fill it (i.e. perform the H2D/P2P transfer) and the
         block's reader is already incremented for the requesting task.
-        Returns None if the cache cannot make room (every block pinned by
-        readers) — the caller synchronizes streams and retries.
+        Returns None — with *no* blocks evicted — when the cache can
+        never make room: every block is pinned by readers, or the
+        pinned blocks fragment the heap so badly that no sequence of
+        evictions yields ``nbytes`` contiguous.  The caller degrades
+        to an uncached read (or synchronizes streams) and retries.
         """
         with self._lock:
             block = self._map.get(key)
@@ -96,11 +99,21 @@ class Alru:
             self.misses += 1
             self.lifetime_misses += 1
             gpu_addr = self.heap.malloc(nbytes)
+            if gpu_addr is None:
+                # over-eviction guard: on a fragmented heap with mixed
+                # tile sizes, evicting zero-reader blocks one-by-one
+                # could wipe the whole cache and *still* fail (pinned
+                # blocks fence the free runs).  Prove attainability
+                # first; if no amount of eviction can make room, fail
+                # without touching a single resident block.
+                evictable = {b.gpu_addr for b in self._map.values()
+                             if b.reader == 0}
+                if self.heap.largest_attainable_run(evictable) < nbytes:
+                    return None  # caller degrades to an uncached read
             while gpu_addr is None:
                 victim = self._dequeue()
-                if victim is None:
+                if victim is None:  # pragma: no cover - guarded above
                     return None  # everything pinned; caller must sync
-                self.heap.free(victim.gpu_addr)
                 gpu_addr = self.heap.malloc(nbytes)
             block = self._enqueue(key, gpu_addr, nbytes)
             block.reader = 1
@@ -141,13 +154,17 @@ class Alru:
 
     # ---------------------------------------------------------- internals
     def _dequeue(self) -> Optional[LRUBlock]:
-        """Alg. 2 ``Dequeue``: walk from the LRU end toward the front and
-        evict the first block with zero readers."""
+        """Alg. 2 ``Dequeue``: walk from the LRU end toward the front,
+        evict the first block with zero readers and release its heap
+        bytes.  ``on_evict`` fires only *after* ``heap.free`` so the
+        MESI-X directory (and any other observer) never sees an
+        evicted tile whose device bytes are still allocated."""
         block = self._back
         while block is not None:
             if block.reader == 0:
                 self._unlink(block)
                 del self._map[block.host_addr]
+                self.heap.free(block.gpu_addr)
                 self.evictions += 1
                 self.lifetime_evictions += 1
                 if self.on_evict is not None:

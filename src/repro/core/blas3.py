@@ -65,80 +65,88 @@ def _context(config: Optional[RuntimeConfig],
 def gemm(A, B, C=None, *, alpha=1.0, beta=0.0, transa="N", transb="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None,
-         backend: Optional[str] = None) -> np.ndarray:
+         backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.gemm(A, B, C, alpha=alpha, beta=beta,
-                            transa=transa, transb=transb, tile=tile))
+                            transa=transa, transb=transb, tile=tile,
+                            dtype=dtype))
 
 
 # ============================================================== SYRK (1b)
 def syrk(A, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None,
-         backend: Optional[str] = None) -> np.ndarray:
+         backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.syrk(A, C, alpha=alpha, beta=beta, uplo=uplo,
-                            trans=trans, tile=tile))
+                            trans=trans, tile=tile, dtype=dtype))
 
 
 # ============================================================= SYR2K (1e)
 def syr2k(A, B, C=None, *, alpha=1.0, beta=0.0, uplo="U", trans="N",
           tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
           runtime: Optional[BlasxRuntime] = None,
-          backend: Optional[str] = None) -> np.ndarray:
+          backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.syr2k(A, B, C, alpha=alpha, beta=beta, uplo=uplo,
-                             trans=trans, tile=tile))
+                             trans=trans, tile=tile, dtype=dtype))
 
 
 # ============================================================== SYMM (1f)
 def symm(A, B, C=None, *, alpha=1.0, beta=0.0, side="L", uplo="U",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None,
-         backend: Optional[str] = None) -> np.ndarray:
+         backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.symm(A, B, C, alpha=alpha, beta=beta, side=side,
-                            uplo=uplo, tile=tile))
+                            uplo=uplo, tile=tile, dtype=dtype))
 
 
 # ============================================================== TRMM (1d)
 def trmm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None,
-         backend: Optional[str] = None) -> np.ndarray:
+         backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.trmm(A, B, alpha=alpha, side=side, uplo=uplo,
-                            transa=transa, diag=diag, tile=tile))
+                            transa=transa, diag=diag, tile=tile,
+                            dtype=dtype))
 
 
 # ============================================================== TRSM (1c)
 def trsm(A, B, *, alpha=1.0, side="L", uplo="U", transa="N", diag="N",
          tile=DEFAULT_TILE, config: Optional[RuntimeConfig] = None,
          runtime: Optional[BlasxRuntime] = None,
-         backend: Optional[str] = None) -> np.ndarray:
+         backend: Optional[str] = None, dtype=None) -> np.ndarray:
     ctx = _context(config, runtime, backend)
     return _finish(ctx.trsm(A, B, alpha=alpha, side=side, uplo=uplo,
-                            transa=transa, diag=diag, tile=tile))
+                            transa=transa, diag=diag, tile=tile,
+                            dtype=dtype))
 
 
 # ==================================================== paper-scale shadows
 def shadow_run(routine: str, n: int, *, tile: int,
                runtime: BlasxRuntime, k: Optional[int] = None,
-               uplo: str = "U", beta: float = 1.0) -> BlasxRuntime:
+               uplo: str = "U", beta: float = 1.0,
+               dtype="float64") -> BlasxRuntime:
     """Metadata-only run of one L3 routine on square N (A/B/C all NxN,
     SYRK/SYR2K inner dim ``k`` or N).  Requires a runtime configured
-    with ``execute=False``.  Returns the runtime (ledgers populated)."""
+    with ``execute=False``.  ``dtype`` sets the storage precision the
+    byte accounting models.  Returns the runtime (ledgers populated)."""
+    from .dtypes import canonical_dtype
     from .tiling import ShadowMatrix
 
     if runtime.cfg.execute:
         raise ValueError("shadow_run needs RuntimeConfig(execute=False)")
+    dt = canonical_dtype(dtype)
     k = k or n
     mats = {
         "A": ShadowMatrix("A", n, k if routine in ("syrk", "syr2k") else n,
-                          tile),
-        "B": ShadowMatrix("B", n, k if routine == "syr2k" else n, tile),
-        "Cin": ShadowMatrix("Cin", n, n, tile),
-        "C": ShadowMatrix("C", n, n, tile),
+                          tile, dtype=dt),
+        "B": ShadowMatrix("B", n, k if routine == "syr2k" else n, tile,
+                          dtype=dt),
+        "Cin": ShadowMatrix("Cin", n, n, tile, dtype=dt),
+        "C": ShadowMatrix("C", n, n, tile, dtype=dt),
     }
     g = {m.matrix_id: m.grid for m in mats.values()}
     if routine == "gemm":

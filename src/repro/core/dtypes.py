@@ -1,0 +1,107 @@
+"""Precision registry for multi-precision L3 BLAS.
+
+The paper reports its headline numbers for both SGEMM and DGEMM
+(Figs. 7-9); this module is the single source of truth for which
+storage dtypes the reproduction supports and on which execution
+backends.  Everything downstream keys off :func:`canonical_dtype`:
+
+  * ``float64`` / ``float32`` — every backend.  The numpy engine
+    computes in the storage dtype; the jax/pallas engines accumulate
+    in float32 (float64 only under ``jax_enable_x64``).
+  * ``float16`` / ``bfloat16`` — jax and pallas backends only.  The
+    per-step host-BLAS path has no fast half-precision story (numpy
+    falls back to scalar loops for bfloat16), so the numpy backend
+    rejects them with a clear error instead of silently crawling.
+    Both engines accumulate half-precision inputs in float32 and cast
+    the result back to the storage dtype.
+
+Byte accounting is *storage*-dtype accounting: a tile's ``nbytes`` is
+``h * w * dtype.itemsize``, so the ALRU/heap capacity model, the
+MESI-X transfer ledger and the link-time comm model all become
+precision-aware for free once the tiled matrices carry the right
+dtype.
+
+``bfloat16`` is a non-native numpy dtype provided by ``ml_dtypes``
+(a jax dependency); on hosts without it the name is rejected with an
+actionable message rather than an obscure ``TypeError``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+# storage dtype name -> backends allowed to execute it
+_ALL_BACKENDS: Tuple[str, ...] = ("numpy", "jax", "pallas")
+SUPPORTED_DTYPES: Dict[str, Tuple[str, ...]] = {
+    "float64": _ALL_BACKENDS,
+    "float32": _ALL_BACKENDS,
+    "float16": ("jax", "pallas"),
+    "bfloat16": ("jax", "pallas"),
+}
+
+
+def canonical_dtype(dtype) -> np.dtype:
+    """Normalize any dtype spelling (str, np.dtype, type, ml_dtypes
+    scalar type) to the canonical ``np.dtype``; rejects dtypes outside
+    the supported set."""
+    try:
+        dt = np.dtype(dtype)
+    except TypeError:
+        # 'bfloat16' only resolves once ml_dtypes has registered it
+        # with numpy — import lazily so callers don't have to
+        if "bfloat16" in str(dtype):
+            try:
+                import ml_dtypes  # noqa: F401
+
+                dt = np.dtype(dtype)
+            except (ImportError, TypeError):
+                raise ValueError(
+                    "dtype 'bfloat16' needs the ml_dtypes package "
+                    "(ships with jax); it is not installed") from None
+        else:
+            raise ValueError(f"unsupported dtype {dtype!r}") from None
+    if dt.name not in SUPPORTED_DTYPES:
+        raise ValueError(
+            f"unsupported dtype {dt.name!r}; L3 routines support "
+            f"{sorted(SUPPORTED_DTYPES)}")
+    return dt
+
+
+def validate_backend_dtype(dtype, backend: str) -> np.dtype:
+    """Check that ``backend`` can execute ``dtype``; returns the
+    canonical dtype.  Half precisions are jax/pallas-only (see module
+    docstring)."""
+    dt = canonical_dtype(dtype)
+    allowed = SUPPORTED_DTYPES[dt.name]
+    if backend not in allowed:
+        raise ValueError(
+            f"dtype {dt.name!r} is not supported on the {backend!r} "
+            f"backend (supported there: "
+            f"{sorted(n for n, b in SUPPORTED_DTYPES.items() if backend in b)}; "
+            f"{dt.name} needs one of {list(allowed)})")
+    return dt
+
+
+def promote_dtypes(a, b) -> np.dtype:
+    """``np.promote_types`` with an equal-dtype fast path.  The fast
+    path matters for non-native dtypes: it keeps bfloat16 groups at
+    bfloat16 without relying on numpy's promotion table.  Pairs with
+    no common dtype (bfloat16 x float16 — numpy's DTypePromotionError)
+    get a clear error telling the caller to pick a precision."""
+    da, db = np.dtype(a), np.dtype(b)
+    if da == db:
+        return da
+    try:
+        return np.promote_types(da, db)
+    except TypeError:
+        raise ValueError(
+            f"no common precision between {da.name} and {db.name} "
+            f"operands; pass an explicit dtype=") from None
+
+
+# NB: the accumulation policy itself (f64 keeps f64 where the engine
+# allows, everything narrower accumulates in f32) lives with the
+# engines — jax_backend's preferred_element_type selection and the
+# pallas kernels' f32 VMEM accumulator — not here: it depends on
+# runtime engine state (jax_enable_x64) this module must not import.

@@ -113,6 +113,29 @@ class BlasxHeap:
                 seg.next.prev = prv
             self.n_coalesce += 1
 
+    def largest_free_run(self) -> int:
+        """Length of the largest currently-free contiguous segment."""
+        return self.largest_attainable_run(())
+
+    def largest_attainable_run(self, freeable_offsets) -> int:
+        """Largest contiguous run reachable by freeing (any subset of)
+        the occupied segments at ``freeable_offsets``.  Occupied
+        segments *not* in the set are barriers (e.g. cache blocks
+        pinned by in-flight readers).  Lets the ALRU prove that no
+        amount of eviction can satisfy an allocation before it starts
+        evicting (over-eviction guard)."""
+        freeable = set(freeable_offsets)
+        best = run = 0
+        seg = self._head
+        while seg is not None:
+            if not seg.occupied or seg.offset in freeable:
+                run += seg.length
+                best = max(best, run)
+            else:
+                run = 0
+            seg = seg.next
+        return best
+
     # -------------------------------------------------------------- invariants
     def check_invariants(self) -> None:
         """Used by property tests: segments tile the arena exactly, no two

@@ -39,6 +39,7 @@ from ..backends import create_backend
 from ..backends.base import StepGroupKey
 from .alru import Alru
 from .coherence import MesixDirectory
+from .dtypes import promote_dtypes
 from .heap import BlasxHeap
 from .task import Task, TileRef
 from .taskqueue import ReadyQueue, ReservationStation
@@ -325,30 +326,63 @@ class BlasxRuntime:
     # ------------------------------------------------------------ threads
     def _run_threads(self, tasks: Sequence[Task]) -> None:
         n_left = [len(tasks)]
-        lock = threading.Lock()
+        cv = threading.Condition()   # signaled on completion and on error
         errors: List[BaseException] = []
+        # per-device batch taken out of the RS but not yet completed —
+        # a crashing worker leaves its entry for the post-join requeue
+        inflight: Dict[int, List[Task]] = {}
+
+        def done() -> bool:  # call with cv held
+            return n_left[0] <= 0 or bool(errors)
+
+        # completion generation: bumped on every completed batch so a
+        # worker whose empty _fill_and_take raced a peer's completion
+        # retries immediately instead of sleeping out the wait timeout
+        gen = [0]
 
         def worker(d: DeviceSim) -> None:
             try:
                 while True:
-                    with lock:
-                        if n_left[0] <= 0:
+                    with cv:
+                        if done():
                             return
+                        my_gen = gen[0]
                     batch = self._fill_and_take(d)
                     if not batch:
-                        time.sleep(0.0005)
+                        # nothing runnable (deps pending / peers hold all
+                        # work): park until a peer completes a batch or
+                        # crashes.  The generation check closes the
+                        # lost-wakeup window between the empty take and
+                        # acquiring the cv; the timeout is a safety net
+                        # against a missed notify, not a poll interval.
+                        with cv:
+                            if done():
+                                return
+                            if gen[0] == my_gen:
+                                cv.wait(timeout=0.05)
                         continue
+                    inflight[d.id] = batch
                     t0 = time.perf_counter()
                     self._execute_batch(d, batch)
                     d.ledger.busy_time += time.perf_counter() - t0
-                    with lock:
-                        for t in batch:
-                            self._complete(t)
+                    with cv:
+                        # pop each task as it completes so an exception
+                        # mid-loop leaves only the genuinely uncompleted
+                        # tail for the crash-recovery requeue (a cleared-
+                        # at-the-end list would requeue completed tasks)
+                        pending = inflight[d.id]
+                        while pending:
+                            self._complete(pending[0])
                             n_left[0] -= 1
+                            pending.pop(0)
+                        gen[0] += 1
+                        cv.notify_all()
             except BaseException as e:  # surface worker crashes
-                errors.append(e)
-                with lock:
-                    n_left[0] = 0
+                with cv:
+                    # append order under the lock = true failure order;
+                    # errors[0] below is the first real failure
+                    errors.append(e)
+                    cv.notify_all()
 
         threads = [threading.Thread(target=worker, args=(d,), daemon=True)
                    for d in self.devices]
@@ -357,6 +391,19 @@ class BlasxRuntime:
         for th in threads:
             th.join()
         if errors:
+            # workers bailed out with work still parked in reservation
+            # stations (their own refills + stolen tasks) and, for the
+            # crashed worker, an in-flight batch already taken from its
+            # RS.  Return all of it to the owning queue so the session's
+            # task accounting shows no stranded tasks: every task is
+            # either completed or dequeueable again.
+            for d in self.devices:
+                src = (self._static_queues[d.id]
+                       if self._static_queues is not None else self._queue)
+                for t in d.rs.drain():
+                    src.requeue(t)
+                for t in inflight.get(d.id, ()):
+                    src.requeue(t)
             raise errors[0]
 
     # ------------------------------------------------- scheduling plumbing
@@ -433,17 +480,26 @@ class BlasxRuntime:
         comm_s = 0.0
         compute_s = 0.0
         recs: List[_TaskExec] = []
-        for t in batch:
-            rec, secs = self._gather_task(d, t, acquired)
-            recs.append(rec)
-            comm_s += secs
-        if self.cfg.execute:
-            self._dispatch_steps(d, recs)
-        for rec in recs:
-            comm_s += self._finalize_task(d, rec)
-            compute_s += rec.task.flops / (d.speed * self.cfg.peak_flops)
-            d.ledger.tasks += 1
-            d.ledger.flops += rec.task.flops
+        try:
+            for t in batch:
+                rec, secs = self._gather_task(d, t, acquired)
+                recs.append(rec)
+                comm_s += secs
+            if self.cfg.execute:
+                self._dispatch_steps(d, recs)
+            for rec in recs:
+                comm_s += self._finalize_task(d, rec)
+                compute_s += rec.task.flops / (d.speed * self.cfg.peak_flops)
+                d.ledger.tasks += 1
+                d.ledger.flops += rec.task.flops
+        except BaseException:
+            # a failing batch must not leave its acquired tiles pinned:
+            # the readers would never hit the release below, permanently
+            # blocking eviction/invalidation of those blocks in this
+            # session (each acquired entry is one translate increment)
+            for key in acquired:
+                d.alru.release(key)
+            raise
         # reader update (the ALRU may evict these from now on)
         for key in acquired:
             d.alru.release(key)
@@ -485,7 +541,7 @@ class BlasxRuntime:
             op=t.routine, transa=step.a.trans, transb=step.b.trans,
             fill_a=step.a.fill, fill_b=step.b.fill,
             m=a.shape[0], k=a.shape[1], n=b.shape[1],
-            dtype=str(np.promote_types(a.dtype, b.dtype)), steps=steps)
+            dtype=str(promote_dtypes(a.dtype, b.dtype)), steps=steps)
 
     def _dispatch_steps(self, d: DeviceSim, recs: List["_TaskExec"]) -> None:
         """Phase 2: one backend call per same-signature group.

@@ -78,6 +78,17 @@ class ReadyQueue:
                     self._pending_deps[dep_id] = left
             self._cv.notify_all()
 
+    def requeue(self, task: Task) -> None:
+        """Return a dequeued-but-never-completed task to the ready end
+        (worker crash recovery: reservation stations are drained back
+        here so no task is stranded).  The task was already counted in
+        ``_outstanding`` when dequeued, so only the ready list moves."""
+        with self._cv:
+            if task.task_id not in self._tasks:
+                raise ValueError(f"requeue of foreign task {task.task_id}")
+            self._ready.append(task.task_id)
+            self._cv.notify_all()
+
     def drained(self) -> bool:
         with self._lock:
             return self._outstanding == 0
@@ -132,6 +143,13 @@ class ReservationStation:
             self._slots = self._slots[n:]
             for t in taken:
                 self._prio.pop(t.task_id, None)
+            return taken
+
+    def drain(self) -> List[Task]:
+        """Remove and return every buffered task (crash recovery)."""
+        with self._lock:
+            taken, self._slots = self._slots, []
+            self._prio.clear()
             return taken
 
     def steal(self) -> Optional[Task]:

@@ -24,8 +24,8 @@ def apply_fill(tile: np.ndarray, fill: str) -> np.ndarray:
         u = np.triu(tile)
         return u + np.triu(tile, 1).T
     if fill == FILL_SYM_L:
-        l = np.tril(tile)
-        return l + np.tril(tile, -1).T
+        lo = np.tril(tile)
+        return lo + np.tril(tile, -1).T
     if fill == FILL_TRI_U:
         return np.triu(tile)
     if fill == FILL_TRI_L:

@@ -98,6 +98,10 @@ class TiledMatrix:
     def matrix_id(self) -> str:
         return self.grid.matrix_id
 
+    @property
+    def dtype(self) -> np.dtype:
+        return self.data.dtype
+
     def read_tile(self, i: int, j: int) -> np.ndarray:
         rs, cs = self.grid.tile_slice(i, j)
         return self.data[rs, cs]
@@ -119,12 +123,15 @@ class ShadowMatrix:
     """Shape-only stand-in for metadata-only runs (execute=False):
     carries the tile grid and byte sizes, never any data.  Lets the
     scheduling/cache/ledger machinery run at the paper's true scale
-    (N up to 40K, f64) without allocating gigabytes."""
+    (N up to 40K, any precision) without allocating gigabytes.
+    ``dtype`` (preferred) or ``itemsize`` sets the byte accounting."""
 
     def __init__(self, matrix_id: str, rows: int, cols: int, tile: int,
-                 itemsize: int = 8):
+                 itemsize: int = 8, dtype=None):
         self.grid = TileGrid(matrix_id, rows, cols, tile)
-        self.itemsize = itemsize
+        self.dtype = np.dtype(dtype) if dtype is not None else None
+        self.itemsize = (self.dtype.itemsize if self.dtype is not None
+                         else itemsize)
 
     @property
     def matrix_id(self) -> str:

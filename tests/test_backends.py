@@ -207,7 +207,8 @@ def test_backend_selection_through_api_layers():
     from repro.api import BlasxContext, cblas
 
     rng = np.random.default_rng(4)
-    A = rng.standard_normal((48, 32)); B = rng.standard_normal((32, 40))
+    A = rng.standard_normal((48, 32))
+    B = rng.standard_normal((32, 40))
     # context kwarg
     with BlasxContext(backend="jax", tile=16) as ctx:
         out = ctx.gemm(A, B)

@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
@@ -119,8 +119,8 @@ def test_pallas_kernel_inside_blasx_runtime():
 
 
 # ===================================================== flash attention
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import flash_attention_ref
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+from repro.kernels.ref import flash_attention_ref  # noqa: E402
 
 FLASH_CASES = [
     # (B, Sq, Sk, H, Hkv, D, causal)

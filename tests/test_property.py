@@ -8,13 +8,13 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import gemm
-from repro.core.alru import Alru
-from repro.core.coherence import MesixDirectory
-from repro.core.heap import BlasxHeap
-from repro.core.runtime import RuntimeConfig
-from repro.core.task import taskize_gemm, total_flops
-from repro.core.tiling import TileGrid, TileKey
+from repro.core import gemm  # noqa: E402
+from repro.core.alru import Alru  # noqa: E402
+from repro.core.coherence import MesixDirectory  # noqa: E402
+from repro.core.heap import BlasxHeap  # noqa: E402
+from repro.core.runtime import RuntimeConfig  # noqa: E402
+from repro.core.task import taskize_gemm, total_flops  # noqa: E402
+from repro.core.tiling import TileGrid, TileKey  # noqa: E402
 
 
 # ------------------------------------------------------------------- heap
@@ -60,6 +60,60 @@ def test_alru_never_evicts_pinned_blocks(accesses, cap_tiles):
             a.release(key)
         a.check_invariants()
         assert pinned in a           # the pinned block must survive
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 11),          # tile identity
+                          st.sampled_from([60, 100, 140, 220]),  # nbytes
+                          st.booleans()),               # release after?
+                min_size=1, max_size=100))
+def test_alru_fragmented_heap_translate_invariants(ops):
+    """Drive a fragmented heap (mixed tile sizes, some tiles left
+    pinned) through Alru.translate.  Invariants at every step:
+
+    * no over-eviction — a translate that fails (None) evicted nothing;
+    * directory/heap agreement — the eviction-callback mirror matches
+      the ALRU's resident set, and heap.used equals the sum of
+      resident block sizes (on_evict fires only after heap.free);
+    * list/map/heap structural invariants hold.
+    """
+    heap = BlasxHeap(500)
+    a = Alru(0, heap)
+    mirror = {}           # key -> nbytes, maintained via on_evict
+
+    def on_evict(dev, key):
+        blk = a.peek(key)
+        assert blk is None                 # already unlinked
+        nb = mirror.pop(key)
+        # the victim's bytes are free by the time observers hear of it
+        assert heap.used + nb <= heap.capacity
+        assert heap.used == sum(mirror.values())
+
+    a.on_evict = on_evict
+    pinned = set()
+    for ident, nbytes, release in ops:
+        key = TileKey("T", 0, ident)
+        before = dict(mirror)
+        if key in a:                       # hit path: sizes stay stable
+            nbytes = a.peek(key).nbytes
+        blk = a.translate(key, nbytes)
+        if blk is None:
+            assert mirror == before        # failed translate evicts nothing
+            assert heap.largest_attainable_run(
+                {b.gpu_addr for b in (a.peek(k) for k in a.keys())
+                 if b.reader == 0}) < nbytes
+        else:
+            mirror[key] = blk.nbytes
+            if release:
+                a.release(key)
+                pinned.discard(key)
+            else:
+                pinned.add(key)
+        assert set(a.keys()) == set(mirror)
+        assert heap.used == sum(mirror.values())
+        assert pinned <= set(a.keys())     # pinned blocks never evicted
+        a.check_invariants()
+        heap.check_invariants()
 
 
 # ----------------------------------------------------------------- MESI-X
