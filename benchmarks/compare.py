@@ -12,10 +12,13 @@ Two classes of checks:
 * **Invariants** — absolute properties of the PR report that must hold
   on any machine: the batched JaxBackend beats the per-step
   NumpyBackend wall-clock on the quick GEMM benchmark, issues
-  strictly fewer kernel launches than scheduled tile tasks, and the
+  strictly fewer kernel launches than scheduled tile tasks, the
   SGEMM lane (float32 storage) is at least as fast as the DGEMM lane
   on the jax backend (half the cache/stage bytes, no f64->f32 staging
-  cast — see benchmarks/backends.py).
+  cast — see benchmarks/backends.py), and the discrete-event overlap
+  lane's structural properties hold (overlap-on makespan <=
+  overlap-off on every policy; blasx COMM fraction <= cublasxt — see
+  benchmarks/overlap.py).
 * **Regressions vs baseline** — metrics compared against
   ``benchmarks/baseline.json`` with a tolerance (default 20%; CI
   passes 35%): the jax-vs-numpy speedup ratio and the deterministic
@@ -116,6 +119,39 @@ def check_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
     else:
         gate.note(f"OK   invariant: jax f32 >= f64 wall-clock "
                   f"(speedup={summary.get('jax_f32_speedup_vs_f64')}x)")
+    check_overlap_invariants(gate, pr_rows)
+
+
+def check_overlap_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
+    """Structural properties of the discrete-event overlap lane.
+
+    Virtual-clock metrics are deterministic and host-independent, so
+    these are hard invariants: letting communication overlap compute
+    can never *lengthen* the modeled makespan, and the cached
+    4-stream blasx schedule must not have a worse Fig. 8 COMM
+    fraction than the uncached 2-stream cublasxt one."""
+    summary = pr_rows.get("overlap/summary")
+    if summary is None:
+        gate.fail("overlap/summary row missing from PR report")
+        return
+    if _num(summary, "overlap_le_off_all") != 1:
+        bad = [name for name, row in pr_rows.items()
+               if name.startswith("overlap/")
+               and _num(row, "overlap_le_off") == 0]
+        gate.fail("invariant: overlap-on makespan must be <= overlap-off "
+                  f"on every policy (violated by: {bad})")
+    else:
+        gate.note("OK   invariant: overlap-on makespan <= overlap-off "
+                  "on every policy")
+    if _num(summary, "blasx_comm_le_cublasxt") != 1:
+        gate.fail(
+            "invariant: blasx COMM fraction must be <= cublasxt "
+            f"(blasx={summary.get('blasx_comm_fraction')}, "
+            f"cublasxt={summary.get('cublasxt_comm_fraction')})")
+    else:
+        gate.note(f"OK   invariant: blasx COMM fraction "
+                  f"{summary.get('blasx_comm_fraction')} <= cublasxt "
+                  f"{summary.get('cublasxt_comm_fraction')}")
 
 
 def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
@@ -157,6 +193,24 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
             gate.check_ratio(name, "gflops", _num(pr, "gflops"),
                              _num(base, "gflops"), tol,
                              higher_is_better=True)
+    # overlap lane: virtual-clock metrics, deterministic across hosts
+    for name in ("overlap/blasx", "overlap/parsec", "overlap/static",
+                 "overlap/cublasxt"):
+        pr, base = both(name)
+        if pr is None:
+            continue
+        gate.check_ratio(name, "comm_fraction",
+                         _num(pr, "comm_fraction"),
+                         _num(base, "comm_fraction"),
+                         tol, higher_is_better=False)
+        gate.check_ratio(name, "overlap_efficiency",
+                         _num(pr, "overlap_efficiency"),
+                         _num(base, "overlap_efficiency"),
+                         tol, higher_is_better=True)
+        gate.check_ratio(name, "makespan_on",
+                         _num(pr, "makespan_on"),
+                         _num(base, "makespan_on"),
+                         tol, higher_is_better=False)
 
 
 def main(argv=None) -> int:

@@ -22,7 +22,8 @@ def run():
         for t in TILES:
             rt = BlasxRuntime(RuntimeConfig(n_devices=3, policy="blasx",
                                             cache_bytes=4 << 30, mode="sim",
-                                            execute=False))
+                                            execute=False,
+                                            record_trace=False))
             shadow_run("gemm", n, tile=t, runtime=rt)
             g = 2.0 * n ** 3 / rt.makespan() / 1e9
             if g > best[1]:

@@ -21,7 +21,7 @@ CACHE = 4 << 30   # 4 GB tile cache per device (12 GB K40 minus workspace)
 def _gemm_gflops(n, n_devices, policy):
     rt = BlasxRuntime(RuntimeConfig(n_devices=n_devices, policy=policy,
                                     cache_bytes=CACHE, mode="sim",
-                                    execute=False))
+                                    execute=False, record_trace=False))
     shadow_run("gemm", n, tile=TILE, runtime=rt, beta=1.0)
     return 2.0 * n ** 3 / rt.makespan() / 1e9
 

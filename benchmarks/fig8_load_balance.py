@@ -19,7 +19,8 @@ NOMINAL = [1.0, 1.0, 1.0]    # what static planners believe
 def _run(policy):
     rt = BlasxRuntime(RuntimeConfig(
         n_devices=3, policy=policy, speeds=SPEEDS, nominal_speeds=NOMINAL,
-        cache_bytes=4 << 30, mode="sim", execute=False))
+        cache_bytes=4 << 30, mode="sim", execute=False,
+        record_trace=False))
     shadow_run("gemm", N, tile=TILE, runtime=rt)
     return rt
 

@@ -1,0 +1,164 @@
+"""Overlap lane: communication/computation overlap per scheduling
+policy under the discrete-event engine (paper §IV / Fig. 8).
+
+For each policy (``blasx`` / ``parsec`` / ``static`` [MAGMA-like] /
+``cublasxt``) one metadata-scale DGEMM is scheduled twice on the
+virtual-clock event engine: once with communication/computation
+overlap as the policy defines it, once with overlap forced off
+(``RuntimeConfig.overlap_comm=False`` — every batch fully serializes
+fetch -> compute -> write-back).  Reported per policy:
+
+* ``comm_fraction``   — Fig. 8 "COMM": unoverlapped communication as a
+  share of total device time (sum over devices of
+  ``unoverlapped_comm / clock``-weighted);
+* ``overlap_efficiency`` — share of modeled link seconds hidden under
+  compute (1.0 = fully pipelined);
+* ``makespan_on`` / ``makespan_off`` and their ratio — what stream
+  overlap is worth end to end.
+
+All metrics are *virtual-clock* derived: deterministic, identical on
+every host, so ``benchmarks/compare.py`` gates them tightly.  The two
+structural invariants (also enforced by the gate): overlap-on makespan
+never exceeds overlap-off, and the cached 4-stream ``blasx`` schedule
+has a COMM fraction no worse than the uncached 2-stream ``cublasxt``
+one.
+
+``python -m benchmarks.overlap --trace trace_pr.json`` additionally
+runs a small *executing* 2-device DGEMM through a ``BlasxContext``,
+exports its Chrome trace, and validates it against the schema — the CI
+bench-smoke artifact.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+# quick: CI smoke scale (the baseline-gated config); full: the paper's
+# Fig. 8 scale (N=16384, T=1024)
+QUICK_N, QUICK_TILE = 8192, 512
+FULL_N, FULL_TILE = 16384, 1024
+POLICIES = ("blasx", "parsec", "static", "cublasxt")
+SPEEDS = [1.0, 0.8, 1.3]     # fig8's heterogeneous realtime speeds
+NOMINAL = [1.0, 1.0, 1.0]
+
+
+def _shadow(policy: str, overlap: Optional[bool], n: int, tile: int):
+    from repro.core.blas3 import shadow_run
+    from repro.core.runtime import BlasxRuntime, RuntimeConfig
+
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=3, policy=policy, speeds=SPEEDS, nominal_speeds=NOMINAL,
+        cache_bytes=2 << 30, mode="sim", execute=False,
+        overlap_comm=overlap, record_trace=False))
+    shadow_run("gemm", n, tile=tile, runtime=rt)
+    return rt
+
+
+def _metrics(rt) -> Dict[str, float]:
+    unovl = sum(d.ledger.unoverlapped_comm for d in rt.devices)
+    comm = sum(d.ledger.comm_time for d in rt.devices)
+    clocks = sum(d.clock for d in rt.devices)
+    idle = sum(d.ledger.idle_time for d in rt.devices)
+    return {
+        "makespan": rt.makespan(),
+        "comm_fraction": unovl / clocks if clocks else 0.0,
+        # same definition (incl. the zero clamp) as the per-device
+        # Ledger.overlap_efficiency property, aggregated over devices
+        "overlap_efficiency":
+            max(0.0, 1.0 - unovl / comm) if comm else 1.0,
+        "idle_s": idle,
+    }
+
+
+def run(quick: bool = True) -> List[Dict]:
+    n, tile = (QUICK_N, QUICK_TILE) if quick else (FULL_N, FULL_TILE)
+    rows: List[Dict] = []
+    frac: Dict[str, float] = {}
+    ok_flags: List[int] = []
+    for policy in POLICIES:
+        on = _metrics(_shadow(policy, None, n, tile))
+        off = _metrics(_shadow(policy, False, n, tile))
+        frac[policy] = on["comm_fraction"]
+        # tiny epsilon: on == off when a policy hides nothing anyway
+        ok = int(on["makespan"] <= off["makespan"] * (1 + 1e-9))
+        ok_flags.append(ok)
+        rows.append({
+            "name": f"overlap/{policy}",
+            "us_per_call": "",
+            "n": n, "tile": tile,
+            "makespan_on": f"{on['makespan']:.4f}",
+            "makespan_off": f"{off['makespan']:.4f}",
+            "overlap_speedup": f"{off['makespan'] / on['makespan']:.3f}",
+            "comm_fraction": f"{on['comm_fraction']:.4f}",
+            "overlap_efficiency": f"{on['overlap_efficiency']:.4f}",
+            "idle_s": f"{on['idle_s']:.4f}",
+            "overlap_le_off": ok,
+        })
+    rows.append({
+        "name": "overlap/summary",
+        "us_per_call": "",
+        "overlap_le_off_all": int(all(ok_flags)),
+        "blasx_comm_le_cublasxt":
+            int(frac["blasx"] <= frac["cublasxt"] * (1 + 1e-9)),
+        "blasx_comm_fraction": f"{frac['blasx']:.4f}",
+        "cublasxt_comm_fraction": f"{frac['cublasxt']:.4f}",
+    })
+    return rows
+
+
+def export_trace(path: str) -> dict:
+    """CI artifact: an *executing* 2-device DGEMM traced end to end,
+    validated against the event-engine schema before being returned."""
+    import numpy as np
+
+    from repro.api import BlasxContext
+    from repro.core.events import max_concurrent, validate_trace
+    from repro.core.runtime import RuntimeConfig
+
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((1024, 1024))
+    B = rng.standard_normal((1024, 1024))
+    with BlasxContext(RuntimeConfig(n_devices=2, mode="sim"),
+                      tile=128) as ctx:
+        Ah, Bh = ctx.tile(A), ctx.tile(B)
+        ctx.gemm(Ah, Bh)   # cold pass: H2D-dominated timeline
+        ctx.gemm(Ah, Bh)   # warm pass: full n-stream compute overlap
+        tr = ctx.trace(path)
+    summary = validate_trace(tr)
+    conc = {dev: max_concurrent(tr, device=dev) for dev in range(2)}
+    print(f"# trace: {summary['spans']} spans, peak concurrent "
+          f"compute per device {conc} -> {path}")
+    return tr
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import rows_to_csv
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.overlap",
+        description="overlap lane + Chrome-trace artifact")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export + validate the 2-device DGEMM trace "
+                         "INSTEAD of running the lane (the CI artifact "
+                         "step; the lane itself already ran via "
+                         "benchmarks.run --quick)")
+    ap.add_argument("--validate", metavar="PATH",
+                    help="round-trip an exported trace file through the "
+                         "schema validator and exit non-zero on "
+                         "violations (the CI gate step)")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.validate:
+        print(rows_to_csv(run()))
+    if args.trace:
+        export_trace(args.trace)
+    if args.validate:
+        from repro.core.events import main as validate_main
+        return validate_main([args.validate])
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

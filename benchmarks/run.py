@@ -16,9 +16,10 @@ accumulate across PRs and be gated by ``benchmarks/compare.py``.
   pallas  TPU tile kernel (interpret) + blocks   (beyond paper)
   context_reuse  warm-context vs per-call H2D    (two-layer API)
   backends       execution backends (numpy/jax/pallas batched dispatch)
+  overlap        comm/compute overlap per policy (discrete-event engine)
 
 ``--quick`` runs the fast deterministic subset (the CI bench-smoke
-lane): table1 + backends.
+lane): table1 + backends + overlap.
 """
 from __future__ import annotations
 
@@ -30,7 +31,7 @@ import sys
 import time
 
 from . import (backends, bench_context_reuse, fig5_heap, fig7_throughput,
-               fig8_load_balance, fig10_tile_size, pallas_kernel,
+               fig8_load_balance, fig10_tile_size, overlap, pallas_kernel,
                table1_gemm_fraction, table4_link_model, table5_comm_volume)
 from .common import rows_to_csv
 
@@ -45,11 +46,13 @@ MODULES = [
     ("pallas", pallas_kernel),
     ("context_reuse", bench_context_reuse),
     ("backends", backends),
+    ("overlap", overlap),
 ]
 
 QUICK_MODULES = [
     ("table1", table1_gemm_fraction),
     ("backends", backends),
+    ("overlap", overlap),
 ]
 
 

@@ -13,7 +13,8 @@ def run():
     rng = np.random.default_rng(0)
     rt = BlasxRuntime(RuntimeConfig(n_devices=3, policy="blasx",
                                     p2p_groups=[[0, 1, 2]],
-                                    cache_bytes=48 << 20, mode="sim"))
+                                    cache_bytes=48 << 20, mode="sim",
+                                    record_trace=False))
     n = 2048
     A = rng.standard_normal((n, n))
     B = rng.standard_normal((n, n))

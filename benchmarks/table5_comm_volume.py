@@ -13,7 +13,8 @@ from repro.core.runtime import BlasxRuntime, RuntimeConfig
 N = 16384
 TILE = 1024
 TOPOLOGY = dict(n_devices=3, p2p_groups=[[0], [1, 2]],
-                cache_bytes=4 << 30, mode="sim", execute=False)
+                cache_bytes=4 << 30, mode="sim", execute=False,
+                record_trace=False)
 
 
 def _volumes(routine: str, policy: str):

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import threading
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -398,6 +399,25 @@ class BlasxContext:
             "launch": rt.launch_stats(),
             "devices": rt.stats(),
         }
+
+    def trace(self, path: Optional[str] = None) -> dict:
+        """Chrome-trace JSON of every sim batch this context scheduled.
+
+        Open the written file in ``chrome://tracing`` or
+        https://ui.perfetto.dev: one track group per device, one track
+        per stream and per H2D/D2D/D2H link lane, so stream overlap
+        and host-link contention are visible span by span.  The trace
+        accumulates across calls; :meth:`reset` starts a fresh one.
+        With ``path`` the JSON is also written to disk.  Outside the
+        sim event engine (``mode="threads"`` /
+        ``time_model="lump"``) the trace is valid but has no spans."""
+        self._check_open()
+        with self._lock:
+            tr = self.runtime.trace()
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(tr, f)
+        return tr
 
     def reset_stats(self) -> None:
         """Zero every ledger/counter *without* dropping cached tiles —

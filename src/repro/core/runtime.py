@@ -40,8 +40,9 @@ from ..backends.base import StepGroupKey
 from .alru import Alru
 from .coherence import MesixDirectory
 from .dtypes import promote_dtypes
+from .events import EventEngine, TimedTask, TimedXfer
 from .heap import BlasxHeap
-from .task import Task, TileRef
+from .task import Ledger, Task, TileRef
 from .taskqueue import ReadyQueue, ReservationStation
 from .tile_kernels import get_solver, materialize
 from .tiling import TiledMatrix, TileKey
@@ -53,6 +54,11 @@ DEFAULT_PEAK_FLOPS = 1.43e12  # K40c double-precision-ish peak (paper §V-A)
 
 # sentinel payload used by metadata-only runs (execute=False)
 _METADATA_ONLY = np.empty(0)
+
+
+def _tile_label(key) -> str:
+    """Human-readable tile name for trace spans."""
+    return f"{key.matrix_id}[{key.i},{key.j}]"
 
 
 @dataclasses.dataclass
@@ -73,6 +79,22 @@ class RuntimeConfig:
     nominal_speeds: Optional[Sequence[float]] = None
     p2p_groups: Optional[Sequence[Sequence[int]]] = None  # default: one group
     mode: str = "sim"                     # sim | threads
+    # sim-mode timing engine: "events" schedules every tile fetch,
+    # compute span and write-back on per-stream/per-link timelines
+    # (repro.core.events); "lump" is the seed max(compute, comm) model,
+    # kept for the bitwise parity suite and A/B timing studies.
+    # Numerics are identical under both (only modeled clocks differ).
+    time_model: str = "events"
+    # force communication/computation overlap on (True) or off (False)
+    # regardless of policy; None derives it from the policy (only the
+    # fork-join supermatrix baseline runs unoverlapped).  The overlap
+    # bench lane uses this to measure the same policy both ways.
+    overlap_comm: Optional[bool] = None
+    # record the event timeline for trace() export (sim+events only).
+    # None resolves to ``execute``: real runs record by default (the
+    # ctx.trace() contract), metadata-scale shadow sweeps — the runs
+    # big enough for span memory to matter — opt in explicitly.
+    record_trace: Optional[bool] = None
     peak_flops: float = DEFAULT_PEAK_FLOPS
     h2d_bw: float = H2D_BW
     d2d_bw: float = D2D_BW
@@ -94,6 +116,10 @@ class RuntimeConfig:
             self.backend = self.kernel
         if self.backend not in ("numpy", "jax", "pallas"):
             raise ValueError(f"unknown backend {self.backend}")
+        if self.time_model not in ("events", "lump"):
+            raise ValueError(f"unknown time_model {self.time_model}")
+        if self.record_trace is None:
+            self.record_trace = bool(self.execute)
         self.kernel = self.backend
         if self.speeds is None:
             self.speeds = [1.0] * self.n_devices
@@ -128,6 +154,8 @@ class RuntimeConfig:
 
     @property
     def overlap(self) -> bool:
+        if self.overlap_comm is not None:
+            return self.overlap_comm
         return self.policy != "supermatrix"
 
     @property
@@ -139,31 +167,6 @@ class RuntimeConfig:
     @property
     def effective_streams(self) -> int:
         return 2 if self.policy == "cublasxt" else self.n_streams
-
-
-@dataclasses.dataclass
-class Ledger:
-    """Per-device communication/compute accounting (Tables IV/V, Fig. 8)."""
-
-    h2d_bytes: int = 0
-    d2h_bytes: int = 0
-    d2d_bytes: int = 0
-    tasks: int = 0
-    steals: int = 0
-    flops: int = 0
-    compute_time: float = 0.0     # modeled seconds
-    comm_time: float = 0.0        # modeled seconds (total, incl. overlapped)
-    unoverlapped_comm: float = 0.0  # Fig. 8 "COMM"
-    busy_time: float = 0.0        # modeled wall contribution
-    # batched-dispatch accounting (execute=True runs only): how many
-    # k-steps went through the backend, how many grouped dispatches
-    # they collapsed into, and what each engine actually executed —
-    # ``batched_steps - kernel_launches`` is the "launches saved" that
-    # the bench lane tracks across PRs.
-    batched_steps: int = 0
-    batched_groups: int = 0
-    kernel_launches: int = 0
-    engine_flops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class DeviceSim:
@@ -204,6 +207,10 @@ class _TaskExec:
     diag: Optional[np.ndarray] = None   # TRSM diagonal tile
     rhs: Optional[np.ndarray] = None    # TRSM right-hand side
     cin: Optional[np.ndarray] = None    # beta != 0 C input
+    # timed transfers collected while gathering/finalizing — the event
+    # engine's raw material (kind, bytes, modeled seconds per movement)
+    xfers: List[TimedXfer] = dataclasses.field(default_factory=list)
+    wb: Optional[TimedXfer] = None      # finalize-phase write-back
 
 
 class BlasxRuntime:
@@ -229,6 +236,12 @@ class BlasxRuntime:
         self.backend = create_backend(cfg.backend)
         self._solver = get_solver()
         self.runs = 0
+        # the discrete-event timing engine only exists where virtual
+        # clocks do: sim mode with time_model="events".  Threads mode
+        # measures real wall time; "lump" keeps the seed max() model.
+        self._engine: Optional[EventEngine] = (
+            EventEngine(cfg) if cfg.mode == "sim"
+            and cfg.time_model == "events" else None)
 
     # ------------------------------------------------------------- public
     def run(self, tasks: Sequence[Task], matrices: Dict[str, TiledMatrix],
@@ -303,20 +316,27 @@ class BlasxRuntime:
                     raise RuntimeError(
                         "scheduler livelock: pending dependencies never "
                         "resolved (task DAG cycle?)")
-                # nudge the starved device's clock past the next busy one
+                # nudge the starved device's clock past the next busy
+                # one; the skipped time is *idle* (a dependency stall),
+                # ledger-charged so busy + idle always sums to the
+                # device clock instead of silently inflating makespan
                 busy = [self.devices[i].clock for i in active
                         if self.devices[i] is not d]
+                before = d.clock
                 d.clock = max(d.clock, min(busy) if busy else d.clock) + 1e-9
+                d.ledger.idle_time += d.clock - before
                 continue
             stall_guard = 0
             ready_at = max((self._completed.get(dep, 0.0)
                             for t in batch for dep in t.deps), default=0.0)
             start = max(d.clock, ready_at)
-            dur = self._execute_batch(d, batch)
-            d.clock = start + dur
-            d.ledger.busy_time += dur
-            for t in batch:
-                self._completed[t.task_id] = d.clock
+            if start > d.clock:  # waited on a producer: idle, not busy
+                d.ledger.idle_time += start - d.clock
+            span, finishes = self._execute_batch(d, batch, start)
+            d.clock = start + span
+            d.ledger.busy_time += span
+            for t, fin in zip(batch, finishes):
+                self._completed[t.task_id] = fin
                 self._complete(t)
                 n_left -= 1
 
@@ -455,10 +475,13 @@ class BlasxRuntime:
         return p
 
     # ----------------------------------------------------------- execution
-    def _execute_batch(self, d: DeviceSim, batch: List[Task]) -> float:
+    def _execute_batch(self, d: DeviceSim, batch: List[Task],
+                       start: float = 0.0) -> Tuple[float, List[float]]:
         """Run up to ``n_streams`` tasks as one overlapped batch; returns
-        the modeled duration.  Readers are released at the end — the
-        paper's StreamsSynch + ReaderUpdate point.
+        ``(modeled span, per-task finish times)`` relative to ``start``
+        (sim mode; threads mode measures real wall time and ignores
+        both).  Readers are released at the end — the paper's
+        StreamsSynch + ReaderUpdate point.
 
         Execution is a three-phase pipeline:
 
@@ -472,13 +495,20 @@ class BlasxRuntime:
           3. *finalize* — per-task epilogue (alpha/beta, TRSM solve,
              triangle masks) and MESI-X write-back.
 
+        Timing happens after the numerics: with the event engine every
+        gathered transfer, per-task compute share and write-back is
+        scheduled onto stream/link timelines (overlap and contention
+        emerge); the "lump" model reproduces the seed
+        ``max(compute, comm)``.  Both see identical tile data — the
+        time model can never change results.
+
         Tasks in one batch are dependency-free w.r.t. each other (the
         ReadyQueue only releases a task after its deps *complete*, and
         completion happens after the batch), so hoisting all reads
         before all writes preserves the sequential semantics."""
         acquired: List[TileKey] = []
         comm_s = 0.0
-        compute_s = 0.0
+        compute_each: List[float] = []
         recs: List[_TaskExec] = []
         try:
             for t in batch:
@@ -489,7 +519,8 @@ class BlasxRuntime:
                 self._dispatch_steps(d, recs)
             for rec in recs:
                 comm_s += self._finalize_task(d, rec)
-                compute_s += rec.task.flops / (d.speed * self.cfg.peak_flops)
+                compute_each.append(
+                    rec.task.flops / (d.speed * self.cfg.peak_flops))
                 d.ledger.tasks += 1
                 d.ledger.flops += rec.task.flops
         except BaseException:
@@ -503,35 +534,85 @@ class BlasxRuntime:
         # reader update (the ALRU may evict these from now on)
         for key in acquired:
             d.alru.release(key)
+        compute_s = sum(compute_each)
         d.ledger.compute_time += compute_s
         d.ledger.comm_time += comm_s
+        if self._engine is not None:
+            return self._schedule_events(d, recs, compute_each, compute_s,
+                                         comm_s, start)
+        # lump-sum model (time_model="lump" and threads mode): one
+        # duration for the whole batch, all tasks finish together
         if self.cfg.overlap:
             d.ledger.unoverlapped_comm += max(0.0, comm_s - compute_s)
-            return max(compute_s, comm_s)
-        d.ledger.unoverlapped_comm += comm_s
-        return compute_s + comm_s
+            dur = max(compute_s, comm_s)
+        else:
+            d.ledger.unoverlapped_comm += comm_s
+            dur = compute_s + comm_s
+        return dur, [start + dur] * len(batch)
+
+    def _schedule_events(self, d: DeviceSim, recs: List["_TaskExec"],
+                         compute_each: List[float], compute_s: float,
+                         comm_s: float, start: float
+                         ) -> Tuple[float, List[float]]:
+        """Hand the batch's timed material to the discrete-event engine
+        and charge the schedule-derived ledger metrics."""
+        items = []
+        for rec, comp in zip(recs, compute_each):
+            t = rec.task
+            items.append(TimedTask(
+                task_id=t.task_id,
+                name=f"{t.routine} C[{t.i},{t.j}]",
+                compute_s=comp, fetches=rec.xfers, writeback=rec.wb,
+                routine=t.routine, steps=len(t.steps), flops=t.flops))
+        span, finishes, busy = self._engine.schedule_batch(
+            d.id, start, items, self.cfg.effective_streams,
+            self.cfg.overlap)
+        led = d.ledger
+        led.h2d_busy_s += busy["h2d"]
+        led.d2d_busy_s += busy["d2d"]
+        led.d2h_busy_s += busy["d2h"]
+        # Fig. 8 "COMM": batch span not covered by an equal amount of
+        # compute — the generalization of the lump model's
+        # max(0, comm - compute) to a multi-stream schedule.  Capped at
+        # the batch's own link seconds: span beyond that is contention
+        # *waiting* (Fig. 8 "OTHER"), not data movement.
+        led.unoverlapped_comm += min(comm_s, max(0.0, span - compute_s))
+        return span, finishes
+
+    def _xfer_secs(self, kind: str, nbytes: int) -> float:
+        """Modeled seconds for one transfer.  The event engine charges
+        full link bandwidth — host-link contention emerges from
+        serialization on the shared lane; the lump model (and threads
+        mode) keeps the seed per-device bandwidth divide."""
+        if kind == "d2d":
+            return nbytes / self.cfg.d2d_bw
+        if self._engine is not None:
+            return nbytes / self.cfg.h2d_bw
+        return nbytes / self.cfg.h2d_bw_eff
 
     def _gather_task(self, d: DeviceSim, t: Task,
                      acquired: List[TileKey]) -> Tuple["_TaskExec", float]:
         """Phase 1: pull every input tile of one task through the cache
-        hierarchy (ledger-charged) and materialize it for compute."""
+        hierarchy (ledger-charged) and materialize it for compute.
+        Every charged movement is also recorded on ``rec.xfers`` — the
+        event engine's per-fetch raw material."""
         comm_s = 0.0
-        a_tiles: List[np.ndarray] = []
-        b_tiles: List[np.ndarray] = []
-        for step in t.steps:
-            a, s1 = self._acquire(d, step.a, acquired)
-            b, s2 = self._acquire(d, step.b, acquired)
-            comm_s += s1 + s2
-            a_tiles.append(a)
-            b_tiles.append(b)
-        rec = _TaskExec(task=t, a_tiles=a_tiles, b_tiles=b_tiles,
+        rec = _TaskExec(task=t, a_tiles=[], b_tiles=[],
                         products=[None] * len(t.steps))
+        for step in t.steps:
+            a, s1 = self._acquire(d, step.a, acquired, rec.xfers)
+            b, s2 = self._acquire(d, step.b, acquired, rec.xfers)
+            comm_s += s1 + s2
+            rec.a_tiles.append(a)
+            rec.b_tiles.append(b)
         if t.finalize is not None:  # TRSM
-            rec.diag, s1 = self._acquire(d, t.finalize.diag_ref, acquired)
-            rec.rhs, s2 = self._bypass_read(d, t.finalize.rhs_ref)
+            rec.diag, s1 = self._acquire(d, t.finalize.diag_ref, acquired,
+                                         rec.xfers)
+            rec.rhs, s2 = self._bypass_read(d, t.finalize.rhs_ref,
+                                            rec.xfers)
             comm_s += s1 + s2
         elif t.read_c is not None:
-            rec.cin, s3 = self._bypass_read(d, t.read_c)
+            rec.cin, s3 = self._bypass_read(d, t.read_c, rec.xfers)
             comm_s += s3
         return rec, comm_s
 
@@ -630,24 +711,28 @@ class BlasxRuntime:
             out_grid.write_tile(t.i, t.j, result.astype(out_grid.data.dtype))
         wb = out_grid.nbytes(t.i, t.j)
         d.ledger.d2h_bytes += wb
-        comm_s += wb / self.cfg.h2d_bw_eff
+        secs = self._xfer_secs("d2h", wb)
+        rec.wb = TimedXfer("d2h", wb, secs, _tile_label(t.out))
+        comm_s += secs
         return comm_s
 
     # ------------------------------------------------------ data movement
-    def _acquire(self, d: DeviceSim, ref: TileRef,
-                 acquired: List[TileKey]) -> Tuple[np.ndarray, float]:
-        """Fetch a cacheable input tile through the 2-level tile cache."""
+    def _acquire(self, d: DeviceSim, ref: TileRef, acquired: List[TileKey],
+                 xfers: List[TimedXfer]) -> Tuple[np.ndarray, float]:
+        """Fetch a cacheable input tile through the 2-level tile cache.
+        Every charged movement is appended to ``xfers`` (cache hits add
+        nothing — they cost no link time)."""
         key = ref.key
         mat = self._matrices[key.matrix_id]
         nbytes = mat.nbytes(key.i, key.j)
         if not self.cfg.use_cache:
-            data, secs = self._bypass_read(d, ref)
+            data, secs = self._bypass_read(d, ref, xfers)
             return data, secs
 
         block = d.alru.translate(key, nbytes)
         if block is None:
             # every cached block pinned: degrade to an uncached read
-            data, secs = self._bypass_read(d, ref)
+            data, secs = self._bypass_read(d, ref, xfers)
             return data, secs
         acquired.append(key)
         secs = 0.0
@@ -660,12 +745,16 @@ class BlasxRuntime:
                 payload = self.devices[peer].store.get(key)
             if payload is not None:  # L2 tile-cache hit: P2P fetch
                 d.ledger.d2d_bytes += nbytes
-                secs = nbytes / self.cfg.d2d_bw
+                secs = self._xfer_secs("d2d", nbytes)
+                xfers.append(TimedXfer("d2d", nbytes, secs,
+                                       _tile_label(key)))
             else:                    # miss in both levels: host fetch
                 payload = (mat.read_tile(key.i, key.j).copy()
                            if self.cfg.execute else _METADATA_ONLY)
                 d.ledger.h2d_bytes += nbytes
-                secs = nbytes / self.cfg.h2d_bw_eff
+                secs = self._xfer_secs("h2d", nbytes)
+                xfers.append(TimedXfer("h2d", nbytes, secs,
+                                       _tile_label(key)))
             d.store[key] = payload
             self.directory.on_fill(key, d.id)
         data = d.store.get(key)
@@ -673,20 +762,25 @@ class BlasxRuntime:
             data = mat.read_tile(key.i, key.j).copy() if self.cfg.execute \
                 else _METADATA_ONLY
             d.ledger.h2d_bytes += nbytes
-            secs += nbytes / self.cfg.h2d_bw_eff
+            s2 = self._xfer_secs("h2d", nbytes)
+            xfers.append(TimedXfer("h2d", nbytes, s2, _tile_label(key)))
+            secs += s2
         if not self.cfg.execute:
             return data, secs
         return materialize(data, ref), secs
 
-    def _bypass_read(self, d: DeviceSim, ref: TileRef) -> Tuple[np.ndarray, float]:
+    def _bypass_read(self, d: DeviceSim, ref: TileRef,
+                     xfers: List[TimedXfer]) -> Tuple[np.ndarray, float]:
         """Uncached host read (C_ij inputs / no-cache policies)."""
         key = ref.key
         mat = self._matrices[key.matrix_id]
         nbytes = mat.nbytes(key.i, key.j)
         d.ledger.h2d_bytes += nbytes
+        secs = self._xfer_secs("h2d", nbytes)
+        xfers.append(TimedXfer("h2d", nbytes, secs, _tile_label(key)))
         if not self.cfg.execute:
-            return _METADATA_ONLY, nbytes / self.cfg.h2d_bw_eff
-        return materialize(mat.read_tile(key.i, key.j), ref), nbytes / self.cfg.h2d_bw_eff
+            return _METADATA_ONLY, secs
+        return materialize(mat.read_tile(key.i, key.j), ref), secs
 
     # ----------------------------------------------------------- sessions
     def reset(self) -> None:
@@ -698,6 +792,8 @@ class BlasxRuntime:
         self.devices = [DeviceSim(d, self.cfg, self.directory)
                         for d in range(self.cfg.n_devices)]
         self.runs = 0
+        if self._engine is not None:  # fresh timelines and trace
+            self._engine = EventEngine(self.cfg)
 
     def reset_stats(self) -> None:
         """Zero ledgers and cache counters *without* evicting anything —
@@ -717,9 +813,32 @@ class BlasxRuntime:
             led = dataclasses.asdict(d.ledger)
             led.update(l1_hits=d.alru.hits, l1_misses=d.alru.misses,
                        evictions=d.alru.evictions,
-                       cache_used=d.heap.used, clock=d.clock)
+                       cache_used=d.heap.used, clock=d.clock,
+                       overlap_efficiency=d.ledger.overlap_efficiency)
             out[f"device{d.id}"] = led
         return out
+
+    def trace(self) -> dict:
+        """Chrome-trace (chrome://tracing / Perfetto) JSON of every sim
+        batch scheduled so far: one process per device, one thread per
+        stream/link lane, balanced B/E spans (see
+        ``repro.core.events``).  The trace accumulates across ``run``
+        calls of a session; ``reset()`` starts a fresh one.  Outside
+        the event engine (threads mode / ``time_model="lump"``) the
+        trace is valid but empty."""
+        from .events import build_chrome_trace
+        extra = {
+            "policy": self.cfg.policy,
+            "backend": self.cfg.backend,
+            "time_model": self.cfg.time_model,
+            "mode": self.cfg.mode,
+            "makespan_s": self.makespan(),
+        }
+        if self._engine is None:
+            return build_chrome_trace([], self.cfg.n_devices,
+                                      self.cfg.effective_streams,
+                                      extra=extra)
+        return self._engine.chrome_trace(extra=extra)
 
     def launch_stats(self) -> Dict[str, object]:
         """Batched-dispatch accounting across devices: how many k-steps

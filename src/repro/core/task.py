@@ -16,9 +16,57 @@ Task properties (paper §IV-A):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .tiling import TileGrid, TileKey
+
+
+@dataclasses.dataclass
+class Ledger:
+    """Per-device communication/compute accounting (Tables IV/V, Fig. 8).
+
+    Lives beside the task model (not the runtime) because both the
+    scheduler (``core.runtime``) and the discrete-event timing engine
+    (``core.events``) charge it — time flows from scheduled *tasks*.
+    """
+
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    d2d_bytes: int = 0
+    tasks: int = 0
+    steals: int = 0
+    flops: int = 0
+    compute_time: float = 0.0     # modeled seconds
+    comm_time: float = 0.0        # modeled seconds (total, incl. overlapped)
+    unoverlapped_comm: float = 0.0  # Fig. 8 "COMM"
+    busy_time: float = 0.0        # modeled wall contribution
+    # sim-mode seconds the device spent with no batch in flight:
+    # dependency waits (a batch delayed past the device clock) and
+    # scheduler stall nudges both land here, so per-device
+    # busy_time + idle_time always sums to the device clock
+    idle_time: float = 0.0
+    # per-link busy seconds this device put on the transfer lanes
+    # (event engine only; the lump model has no per-link timelines)
+    h2d_busy_s: float = 0.0
+    d2d_busy_s: float = 0.0
+    d2h_busy_s: float = 0.0
+    # batched-dispatch accounting (execute=True runs only): how many
+    # k-steps went through the backend, how many grouped dispatches
+    # they collapsed into, and what each engine actually executed —
+    # ``batched_steps - kernel_launches`` is the "launches saved" that
+    # the bench lane tracks across PRs.
+    batched_steps: int = 0
+    batched_groups: int = 0
+    kernel_launches: int = 0
+    engine_flops: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of modeled communication hidden under compute
+        (1.0 when there was nothing to hide)."""
+        if self.comm_time <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.unoverlapped_comm / self.comm_time)
 
 # fill modifiers applied to the *stored* tile before the optional transpose
 FILL_FULL = "full"

@@ -200,9 +200,15 @@ def test_demand_driven_balances_heterogeneous_devices():
     nominal = [1.0, 1.0, 1.0]          # what the static planner believes
 
     def spread(policy):
+        # compute-bound regime (10x host link): load balance is what
+        # this test measures.  At the paper's PCI-E bandwidth this
+        # small workload is link-bound and the discrete-event engine
+        # correctly pins every device's finish time to the shared
+        # host-link drain — masking the compute imbalance under test.
         rt = BlasxRuntime(RuntimeConfig(
             n_devices=3, mode="sim", policy=policy, speeds=speeds,
-            nominal_speeds=nominal, cache_bytes=64 << 20))
+            nominal_speeds=nominal, cache_bytes=64 << 20,
+            h2d_bw=6.54e10))
         gemm(A, B, tile=256, runtime=rt)
         clocks = [d.clock for d in rt.devices]
         return (max(clocks) - min(clocks)) / max(clocks)

@@ -1,0 +1,110 @@
+"""Scheduler-policy invariant matrix: for every policy x execution
+mode, the knobs the policy claims to disable really stay off (no
+steals without stealing, no P2P traffic without the L2 cache, 2
+streams under cublasxt) and static splits cover every task exactly
+once."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import blas3
+from repro.core import task as taskmod
+from repro.core.runtime import BlasxRuntime, RuntimeConfig
+from repro.core.tiling import TileGrid
+
+POLICIES = ("blasx", "parsec", "cublasxt", "static", "supermatrix")
+MODES = ("sim", "threads")
+
+RNG = np.random.default_rng(3)
+N, TILE = 768, 128
+
+
+@pytest.mark.parametrize("policy,mode",
+                         list(itertools.product(POLICIES, MODES)))
+def test_policy_invariant_matrix(policy, mode):
+    A = RNG.standard_normal((N, N))
+    B = RNG.standard_normal((N, N))
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=3, mode=mode, policy=policy, cache_bytes=32 << 20))
+    out = blas3.gemm(A, B, tile=TILE, runtime=rt)
+    np.testing.assert_allclose(out, A @ B, rtol=1e-10, atol=1e-10)
+    cfg = rt.cfg
+    ledgers = [d.ledger for d in rt.devices]
+    # every scheduled task ran exactly once
+    n_tiles = (N // TILE) ** 2
+    assert sum(led.tasks for led in ledgers) == n_tiles
+    # stealing really off: zero steal events across the session
+    if not cfg.use_stealing:
+        assert sum(led.steals for led in ledgers) == 0
+    # L2 really off: no P2P ledger traffic anywhere
+    if not cfg.use_l2:
+        assert sum(led.d2d_bytes for led in ledgers) == 0
+        assert all(led.d2d_busy_s == 0.0 for led in ledgers)
+    # cublasxt runs 2 streams; everything else the configured width
+    if policy == "cublasxt":
+        assert cfg.effective_streams == 2
+    else:
+        assert cfg.effective_streams == cfg.n_streams
+    # overlap is a policy property: only supermatrix forks-and-joins
+    assert cfg.overlap == (policy != "supermatrix")
+
+
+@pytest.mark.parametrize("policy", ["cublasxt", "static"])
+def test_static_assignment_buckets_cover_every_task_exactly_once(policy):
+    ga = TileGrid("A", N, N, TILE)
+    gb = TileGrid("B", N, N, TILE)
+    gc = TileGrid("C", N, N, TILE)
+    tasks = taskmod.taskize_gemm(ga, gb, gc, "N", "N", 1.0, 0.0)
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=3, mode="sim", policy=policy,
+        speeds=[1.0, 0.5, 2.0], nominal_speeds=[1.0, 0.5, 2.0]))
+    queues = rt._static_split(tasks)
+    assert len(queues) == 3
+    buckets = [set(q._tasks.keys()) for q in queues]
+    all_ids = {t.task_id for t in tasks}
+    # disjoint cover: every task in exactly one bucket
+    assert set().union(*buckets) == all_ids
+    assert sum(len(b) for b in buckets) == len(all_ids)
+    if policy == "static":
+        # speed-proportional split gives the 2.0x device the most work
+        sizes = [len(b) for b in buckets]
+        assert sizes[2] == max(sizes) and sizes[1] == min(sizes)
+    else:
+        # round robin: device d owns tasks with id % 3 == d
+        for dev, bucket in enumerate(buckets):
+            assert all(tid % 3 == dev for tid in bucket)
+
+
+def _traced_policy_run(policy):
+    """Two passes over persistent handles: the warm second pass is
+    where stream concurrency peaks (no fetch stagger)."""
+    from repro.api import BlasxContext
+
+    A = RNG.standard_normal((1024, 1024))
+    with BlasxContext(RuntimeConfig(n_devices=2, mode="sim",
+                                    policy=policy), tile=128) as ctx:
+        Ah = ctx.tile(A)
+        ctx.gemm(Ah, Ah)
+        ctx.gemm(Ah, Ah)
+        return ctx.trace(), ctx.cfg
+
+
+def test_cublasxt_trace_shows_at_most_two_concurrent_computes():
+    """The 2-stream cap is visible in the schedule itself, not just
+    the config property."""
+    from repro.core.events import max_concurrent, validate_trace
+
+    tr, _ = _traced_policy_run("cublasxt")
+    validate_trace(tr)
+    for dev in range(2):
+        assert max_concurrent(tr, device=dev) <= 2
+
+
+def test_blasx_trace_reaches_full_stream_width():
+    from repro.core.events import max_concurrent, validate_trace
+
+    tr, cfg = _traced_policy_run("blasx")
+    validate_trace(tr)
+    assert max(max_concurrent(tr, device=d) for d in range(2)) \
+        >= cfg.n_streams

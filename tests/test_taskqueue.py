@@ -1,0 +1,167 @@
+"""ReadyQueue edge-case coverage (paper §IV-C): the dequeue_wait
+spurious-wakeup contract, crash-recovery requeue exactly-once
+semantics, and dependency-gated enqueue of dependents."""
+import threading
+import time
+
+import pytest
+
+from repro.core.task import Task
+from repro.core.taskqueue import ReadyQueue, ReservationStation
+from repro.core.tiling import TileKey
+
+
+def _task(tid, deps=()):
+    return Task(task_id=tid, routine="gemm", out=TileKey("C", tid, 0),
+                i=tid, j=0, steps=(), alpha=1.0, beta=0.0,
+                deps=tuple(deps))
+
+
+# -------------------------------------------------- spurious-wakeup contract
+def test_dequeue_wait_none_with_outstanding_means_retry():
+    """The documented contract: a None return while tasks are still
+    outstanding is a spurious wakeup — the caller must retry, not
+    treat the queue as drained."""
+    a, b = _task(0), _task(1, deps=[0])
+    q = ReadyQueue([a, b])
+    got_a = q.try_dequeue()
+    assert got_a is a
+    # b is dep-blocked: a short wait times out with None...
+    assert q.dequeue_wait(timeout=0.01) is None
+    # ...and that None does NOT mean drained: work is still outstanding
+    assert not q.drained()
+    assert q.pending_count() == 1
+    q.complete(a)
+    assert q.dequeue_wait(timeout=0.01) is b
+    q.complete(b)
+    assert q.drained()
+    # drained queue: None now genuinely means "no more work"
+    assert q.dequeue_wait(timeout=0.01) is None
+
+
+def test_dequeue_wait_wakes_on_cross_thread_completion():
+    """A parked worker is woken by a peer completing the producer —
+    the retry loop converges without waiting out the timeout."""
+    a, b = _task(0), _task(1, deps=[0])
+    q = ReadyQueue([a, b])
+    assert q.try_dequeue() is a
+    result = []
+
+    def consumer():
+        while True:
+            t = q.dequeue_wait(timeout=0.5)
+            if t is not None:
+                result.append(t)
+                q.complete(t)
+                return
+            if q.drained():
+                return
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    time.sleep(0.05)           # let the consumer park in dequeue_wait
+    q.complete(a)              # releases b and notifies
+    th.join(timeout=5)
+    assert not th.is_alive()
+    assert result == [b]
+    assert q.drained()
+
+
+# ----------------------------------------------------- crash-recovery requeue
+def test_requeue_redelivers_exactly_once():
+    """Simulated worker crash: a dequeued-but-never-completed task is
+    requeued (RS drain path) and must be delivered exactly once more —
+    no duplicate, no loss, and accounting still drains to zero."""
+    a = _task(0)
+    q = ReadyQueue([a])
+    t = q.try_dequeue()
+    assert t is a and not q.drained()
+    q.requeue(t)               # crash recovery
+    assert q.has_ready()
+    again = q.try_dequeue()
+    assert again is a
+    assert q.try_dequeue() is None      # exactly once: queue is empty
+    assert not q.drained()              # still outstanding until completed
+    q.complete(again)
+    assert q.drained()
+
+
+def test_requeue_rejects_foreign_tasks():
+    q = ReadyQueue([_task(0)])
+    with pytest.raises(ValueError, match="foreign"):
+        q.requeue(_task(99))
+
+
+def test_rs_drain_then_requeue_roundtrip():
+    """The runtime's crash path: tasks parked in a reservation station
+    drain back to the queue and every one is dequeueable again."""
+    tasks = [_task(i) for i in range(4)]
+    q = ReadyQueue(tasks)
+    rs = ReservationStation(0, 4)
+    for _ in range(3):
+        rs.put(q.try_dequeue(), 0.0)
+    assert len(rs) == 3
+    drained = rs.drain()
+    assert len(drained) == 3 and len(rs) == 0
+    for t in drained:
+        q.requeue(t)
+    seen = set()
+    while True:
+        t = q.try_dequeue()
+        if t is None:
+            break
+        seen.add(t.task_id)
+        q.complete(t)
+    assert seen == {0, 1, 2, 3}
+    assert q.drained()
+
+
+# ----------------------------------------------------- dependency gating
+def test_dependent_enqueues_only_after_last_producer():
+    """A task with two producers becomes ready exactly when the LAST
+    one completes — not the first."""
+    a, b = _task(0), _task(1)
+    c = _task(2, deps=[0, 1])
+    q = ReadyQueue([a, b, c])
+    ta, tb = q.try_dequeue(), q.try_dequeue()
+    assert {ta.task_id, tb.task_id} == {0, 1}
+    assert not q.has_ready() and q.pending_count() == 1
+    q.complete(ta)
+    assert not q.has_ready()           # one producer is not enough
+    assert q.pending_count() == 1
+    q.complete(tb)
+    assert q.has_ready() and q.pending_count() == 0
+    tc = q.try_dequeue()
+    assert tc is c
+    q.complete(tc)
+    assert q.drained()
+
+
+def test_chain_releases_in_order():
+    """A TRSM-style linear chain releases one task per completion."""
+    tasks = [_task(0)] + [_task(i, deps=[i - 1]) for i in range(1, 5)]
+    q = ReadyQueue(tasks)
+    order = []
+    while not q.drained():
+        t = q.try_dequeue()
+        assert t is not None, "chain stalled"
+        assert not q.has_ready(), "chain released more than one task"
+        order.append(t.task_id)
+        q.complete(t)
+    assert order == [0, 1, 2, 3, 4]
+
+
+def test_complete_foreign_task_resolves_edges_only():
+    """Static-split semantics: completing a task owned by another
+    queue resolves dependency edges here without touching outstanding
+    accounting."""
+    producer = _task(0)                # lives in ANOTHER device's queue
+    dependent = _task(1, deps=[0])
+    q = ReadyQueue([dependent])        # only the dependent is ours
+    assert not q.has_ready()
+    q.complete(producer)               # foreign completion
+    assert q.has_ready()
+    t = q.try_dequeue()
+    assert t is dependent
+    q.complete(t)
+    assert q.drained()
