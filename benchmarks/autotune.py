@@ -1,0 +1,112 @@
+"""Autotune lane: the Fig. 10 tile sweep, closed-loop (tuned vs default).
+
+``benchmarks/fig10_tile_size.py`` reproduces the paper's open-loop
+curve — makespan as a function of tile size.  This lane runs the
+:mod:`repro.tuning` autotuner over the same space and reports, per
+routine x {float64, float32}:
+
+* ``tuned_makespan``   — the virtual-clock makespan of the autotuned
+  ``(tile, n_streams, policy)`` config;
+* ``default_makespan`` — the fixed-default config (T=256, the base
+  config's streams/policy) on the same shapes;
+* ``tuned_le_default`` — the structural invariant gated by
+  ``compare.py``: the tuned pick can never be worse than the default
+  (the default is always candidate zero of the sweep);
+* ``swept``            — how many shadow runs the search cost.
+
+A second tuner over the same cache then re-tunes every key and the
+summary row records ``second_pass_sweeps`` — **zero** means every later
+context starts warm (the cache-hit acceptance criterion, also gated).
+
+All metrics are virtual-clock deterministic: identical on every host,
+so ``compare.py`` gates them tightly against ``baseline.json``.
+
+When ``BLASX_TUNING_CACHE`` is set (the CI bench-smoke job points it
+at ``TUNING_pr.json``), the tuning cache persists there and is
+uploaded as an artifact alongside ``BENCH_pr.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+QUICK_N, FULL_N = 2048, 8192
+QUICK_TILES = (256, 512, 1024)
+FULL_TILES = (256, 512, 1024, 2048)
+STREAMS = (2, 4)
+POLICIES = ("blasx", "static")
+DTYPES = ("float64", "float32")
+
+
+def _base_cfg():
+    from repro.core.runtime import RuntimeConfig
+
+    # the paper's 3-device Everest-like topology at shadow scale
+    return RuntimeConfig(n_devices=3, policy="blasx", cache_bytes=2 << 30,
+                         mode="sim", execute=False, record_trace=False)
+
+
+def run(quick: bool = True) -> List[Dict]:
+    from repro.tuning import Autotuner, TuningCache
+    from repro.tuning.autotuner import ROUTINES
+
+    n = QUICK_N if quick else FULL_N
+    tiles = QUICK_TILES if quick else FULL_TILES
+    cfg = _base_cfg()
+    cache = TuningCache()   # file-backed iff BLASX_TUNING_CACHE is set
+    tuner = Autotuner(cfg, cache=cache, tiles=tiles, streams=STREAMS,
+                      policies=POLICIES)
+    rows: List[Dict] = []
+    ok_flags: List[int] = []
+    for routine in ROUTINES:
+        for dtype in DTYPES:
+            before = tuner.sweeps
+            best = tuner.tune(routine, n, n, n, dtype=dtype)
+            ok = int(best.makespan <= best.default_makespan * (1 + 1e-9))
+            ok_flags.append(ok)
+            rows.append({
+                "name": f"autotune/{routine}_{'f64' if dtype == 'float64' else 'f32'}",
+                "us_per_call": "",
+                "n": n,
+                "tile": best.tile,
+                "n_streams": best.n_streams,
+                "policy": best.policy,
+                "tuned_makespan": f"{best.makespan:.4f}",
+                "default_makespan": f"{best.default_makespan:.4f}",
+                "speedup_vs_default": f"{best.speedup_vs_default:.3f}",
+                "tuned_le_default": ok,
+                "swept": tuner.sweeps - before,
+                "source": best.source,
+            })
+    first_pass_sweeps = tuner.sweeps
+    # a later context with the same topology: every key must be a pure
+    # cache hit (zero shadow runs)
+    second = Autotuner(cfg, cache=cache, tiles=tiles, streams=STREAMS,
+                      policies=POLICIES)
+    for routine in ROUTINES:
+        for dtype in DTYPES:
+            second.tune(routine, n, n, n, dtype=dtype)
+    rows.append({
+        "name": "autotune/summary",
+        "us_per_call": "",
+        "tuned_le_default_all": int(all(ok_flags)),
+        "first_pass_sweeps": first_pass_sweeps,
+        "second_pass_sweeps": second.sweeps,
+        "second_pass_pure_cache_hit": int(second.sweeps == 0),
+        "cache_entries": len(cache),
+        "cache_path": cache.path or "",
+        "fingerprint": tuner.fingerprint,
+    })
+    return rows
+
+
+def main(argv=None) -> int:
+    from .common import rows_to_csv
+
+    print(rows_to_csv(run()))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -15,10 +15,12 @@ Two classes of checks:
   strictly fewer kernel launches than scheduled tile tasks, the
   SGEMM lane (float32 storage) is at least as fast as the DGEMM lane
   on the jax backend (half the cache/stage bytes, no f64->f32 staging
-  cast — see benchmarks/backends.py), and the discrete-event overlap
+  cast — see benchmarks/backends.py), the discrete-event overlap
   lane's structural properties hold (overlap-on makespan <=
   overlap-off on every policy; blasx COMM fraction <= cublasxt — see
-  benchmarks/overlap.py).
+  benchmarks/overlap.py), and the runtime-autotuner lane's properties
+  hold (tuned makespan <= default on every routine x dtype; the second
+  tuning pass is a pure cache hit — see benchmarks/autotune.py).
 * **Regressions vs baseline** — metrics compared against
   ``benchmarks/baseline.json`` with a tolerance (default 20%; CI
   passes 35%): the jax-vs-numpy speedup ratio and the deterministic
@@ -120,6 +122,7 @@ def check_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
         gate.note(f"OK   invariant: jax f32 >= f64 wall-clock "
                   f"(speedup={summary.get('jax_f32_speedup_vs_f64')}x)")
     check_overlap_invariants(gate, pr_rows)
+    check_autotune_invariants(gate, pr_rows)
 
 
 def check_overlap_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
@@ -152,6 +155,34 @@ def check_overlap_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
         gate.note(f"OK   invariant: blasx COMM fraction "
                   f"{summary.get('blasx_comm_fraction')} <= cublasxt "
                   f"{summary.get('cublasxt_comm_fraction')}")
+
+
+def check_autotune_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
+    """Structural properties of the runtime-autotuner lane (virtual
+    clock, deterministic): the tuned config's makespan never exceeds
+    the fixed default's on any routine x dtype (the default is always
+    candidate zero of the sweep), and a second tuner over the same
+    cache performs ZERO shadow runs — every later context starts warm."""
+    summary = pr_rows.get("autotune/summary")
+    if summary is None:
+        gate.fail("autotune/summary row missing from PR report")
+        return
+    if _num(summary, "tuned_le_default_all") != 1:
+        bad = [name for name, row in pr_rows.items()
+               if name.startswith("autotune/")
+               and _num(row, "tuned_le_default") == 0]
+        gate.fail("invariant: tuned makespan must be <= default makespan "
+                  f"on every routine x dtype (violated by: {bad})")
+    else:
+        gate.note("OK   invariant: tuned makespan <= default on every "
+                  "routine x dtype")
+    if _num(summary, "second_pass_pure_cache_hit") != 1:
+        gate.fail(
+            "invariant: the second tuning pass must be a pure cache hit "
+            f"(second_pass_sweeps={summary.get('second_pass_sweeps')})")
+    else:
+        gate.note(f"OK   invariant: second tuning pass swept 0 configs "
+                  f"({summary.get('cache_entries')} cached entries)")
 
 
 def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
@@ -211,6 +242,21 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
                          _num(pr, "makespan_on"),
                          _num(base, "makespan_on"),
                          tol, higher_is_better=False)
+    # autotune lane: virtual-clock metrics, deterministic across hosts
+    for routine in ("gemm", "syrk", "syr2k", "symm", "trmm", "trsm"):
+        for prec in ("f64", "f32"):
+            name = f"autotune/{routine}_{prec}"
+            pr, base = both(name)
+            if pr is None:
+                continue
+            gate.check_ratio(name, "tuned_makespan",
+                             _num(pr, "tuned_makespan"),
+                             _num(base, "tuned_makespan"),
+                             tol, higher_is_better=False)
+            gate.check_ratio(name, "default_makespan",
+                             _num(pr, "default_makespan"),
+                             _num(base, "default_makespan"),
+                             tol, higher_is_better=False)
 
 
 def main(argv=None) -> int:

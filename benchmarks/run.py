@@ -17,9 +17,10 @@ accumulate across PRs and be gated by ``benchmarks/compare.py``.
   context_reuse  warm-context vs per-call H2D    (two-layer API)
   backends       execution backends (numpy/jax/pallas batched dispatch)
   overlap        comm/compute overlap per policy (discrete-event engine)
+  autotune       tuned-vs-default config search  (runtime autotuner)
 
 ``--quick`` runs the fast deterministic subset (the CI bench-smoke
-lane): table1 + backends + overlap.
+lane): table1 + backends + overlap + autotune.
 """
 from __future__ import annotations
 
@@ -30,9 +31,10 @@ import platform
 import sys
 import time
 
-from . import (backends, bench_context_reuse, fig5_heap, fig7_throughput,
-               fig8_load_balance, fig10_tile_size, overlap, pallas_kernel,
-               table1_gemm_fraction, table4_link_model, table5_comm_volume)
+from . import (autotune, backends, bench_context_reuse, fig5_heap,
+               fig7_throughput, fig8_load_balance, fig10_tile_size, overlap,
+               pallas_kernel, table1_gemm_fraction, table4_link_model,
+               table5_comm_volume)
 from .common import rows_to_csv
 
 MODULES = [
@@ -41,6 +43,7 @@ MODULES = [
     ("fig7+table3", fig7_throughput),
     ("fig8", fig8_load_balance),
     ("fig10", fig10_tile_size),
+    ("autotune", autotune),
     ("table4", table4_link_model),
     ("table5", table5_comm_volume),
     ("pallas", pallas_kernel),
@@ -53,6 +56,7 @@ QUICK_MODULES = [
     ("table1", table1_gemm_fraction),
     ("backends", backends),
     ("overlap", overlap),
+    ("autotune", autotune),
 ]
 
 

@@ -23,12 +23,17 @@ def gemm_batched(ctx, As: Sequence, Bs: Sequence,
     ``As``/``Bs`` may mix numpy arrays and ``MatrixHandle``s; repeating
     one handle across the batch (shared weights) is the intended warm
     path.  ``dtype`` pins the batch's storage precision (same rules as
-    ``ctx.gemm``).  Returns a list of ``MatrixHandle``s.
+    ``ctx.gemm``).  ``tile="auto"`` resolves ONE tuned tile from the
+    first entry's shape (via the runtime autotuner) and applies it to
+    the whole batch — batch entries share tile keys, so they must
+    share a tile size.  Returns a list of ``MatrixHandle``s.
     """
     if len(As) != len(Bs):
         raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Bs)} B's")
     if Cs is not None and len(Cs) != len(As):
         raise ValueError(f"batch mismatch: {len(As)} A's vs {len(Cs)} C's")
+    if tile == "auto":
+        tile = _auto_batch_tile(ctx, As[0], Bs[0], transa, transb, dtype)
     # pre-register handles so every batch entry shares tile keys
     Ahs = [ctx.tile(a, tile, dtype=dtype) for a in As]
     Bhs = [ctx.tile(b, tile, dtype=dtype) for b in Bs]
@@ -42,6 +47,19 @@ def gemm_batched(ctx, As: Sequence, Bs: Sequence,
                  tile=tile, dtype=dtype)
         for i in range(len(As))
     ]
+
+
+def _auto_batch_tile(ctx, a0, b0, transa: str, transb: str, dtype) -> int:
+    """Resolve one tuned tile for a whole GEMM batch from its first
+    entry's logical (m, k, n) — batched entries are same-shaped in the
+    cuBLAS contract, and near-shaped entries land in the same tuning
+    bucket anyway."""
+    a_sh = a0.shape if hasattr(a0, "shape") else np.asarray(a0).shape
+    b_sh = b0.shape if hasattr(b0, "shape") else np.asarray(b0).shape
+    ta, tb = transa.upper()[0], transb.upper()[0]
+    m, k = (a_sh[0], a_sh[1]) if ta == "N" else (a_sh[1], a_sh[0])
+    n = b_sh[1] if tb == "N" else b_sh[0]
+    return ctx.auto_tile("gemm", m, k, n, dtype=dtype)
 
 
 def gemm_strided_batched(ctx, A, B, C=None, *, alpha: float = 1.0,
@@ -77,6 +95,10 @@ def gemm_strided_batched(ctx, A, B, C=None, *, alpha: float = 1.0,
         raise ValueError("at least one operand must be 3-D")
     nb = sizes.pop()
 
+    if tile == "auto":
+        tile = _auto_batch_tile(ctx, A if a3 is None else a3[0],
+                                B if b3 is None else b3[0],
+                                transa, transb, dtype)
     # broadcast operands become one shared handle (stride-0 reuse)
     Ah = ctx.tile(A, tile, dtype=dtype) if a3 is None else None
     Bh = ctx.tile(B, tile, dtype=dtype) if b3 is None else None

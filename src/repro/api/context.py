@@ -46,8 +46,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..core import task as taskmod
-from ..core.dtypes import (SUPPORTED_DTYPES, promote_dtypes,
-                           validate_backend_dtype)
+from ..core.dtypes import (SUPPORTED_DTYPES, canonical_dtype,
+                           promote_dtypes, validate_backend_dtype)
 from ..core.runtime import BlasxRuntime, RuntimeConfig
 from ..core.tiling import TiledMatrix
 from .futures import BlasFuture, SerialExecutor
@@ -173,6 +173,24 @@ class BlasxContext:
         engines accumulate them in float32).  ``None`` (default)
         preserves the legacy promote-from-inputs behaviour.  Each
         routine also takes a per-call ``dtype=`` that overrides this.
+    auto_tune:
+        Enable the shape-adaptive runtime autotuner
+        (``repro.tuning``).  Raw-array calls without an explicit
+        ``tile=`` then resolve their tile size per (routine, shape
+        bucket, dtype) from the tuning cache — sweeping candidate
+        ``(tile, n_streams, policy)`` configs through metadata-only
+        shadow runs on the first miss — and, while the context is
+        still cold (no call has executed), the first tuned call may
+        rebuild the runtime with the tuned ``n_streams``/``policy``.
+        Calls on :class:`MatrixHandle` operands keep the handle's tile
+        (re-tiling would break the warm-cache contract).  Any call may
+        also pass ``tile="auto"`` explicitly — with or without
+        ``auto_tune`` — to resolve just the tile size.
+    tuning_cache:
+        Where tuned configs persist: ``None`` (default) shares the
+        process-wide cache (second context with the same topology is a
+        pure cache hit), a path string gives a JSON file that also
+        survives processes, or pass a ``repro.tuning.TuningCache``.
 
     The context is a context manager; :meth:`close` shuts down the
     async executor and drops all cached tiles.  All methods are
@@ -185,7 +203,9 @@ class BlasxContext:
                  runtime: Optional[BlasxRuntime] = None,
                  tile: int = DEFAULT_TILE,
                  backend: Optional[str] = None,
-                 dtype=None):
+                 dtype=None,
+                 auto_tune: bool = False,
+                 tuning_cache=None):
         if backend is not None:
             if runtime is not None:
                 if runtime.cfg.backend != backend:
@@ -211,6 +231,9 @@ class BlasxContext:
         self._lock = threading.RLock()
         self._executor: Optional[SerialExecutor] = None
         self._closed = False
+        self._auto_tune = bool(auto_tune)
+        self._tuning_cache = tuning_cache
+        self._tuner = None                  # built lazily (repro.tuning)
 
     # ------------------------------------------------------------ lifecycle
     def __enter__(self) -> "BlasxContext":
@@ -273,6 +296,13 @@ class BlasxContext:
         explicitly — a handle deliberately tiled at a non-default
         precision stays adoptable under the context default."""
         self._check_open()
+        if isinstance(tile, str):
+            # a handle has no routine context to tune against; callers
+            # wanting tuned handles pre-resolve via auto_tile
+            raise ValueError(
+                "tile='auto' is resolved per routine call; use "
+                "ctx.auto_tile(routine, m, k, n) to pre-resolve a tuned "
+                "tile for ctx.tile()")
         dt = self._resolve_dtype(dtype)
         if isinstance(data, MatrixHandle):
             return self._adopt(data, dt if dtype is not None else None,
@@ -461,6 +491,97 @@ class BlasxContext:
                 self._executor = SerialExecutor(name="blasx-ctx")
             return self._executor.submit(fn, *args, **kwargs)
 
+    # ==================================================== runtime autotuning
+    def _get_tuner(self):
+        """Lazily build the :class:`repro.tuning.Autotuner` bound to
+        this context's topology (imported here: tuning depends on
+        core.runtime, the api layer must not import it eagerly)."""
+        if self._tuner is None:
+            from ..tuning import Autotuner
+            self._tuner = Autotuner(self.cfg, cache=self._tuning_cache,
+                                    default_tile=self.tile_size)
+        return self._tuner
+
+    def auto_tile(self, routine: str, m: int, k: Optional[int] = None,
+                  n: Optional[int] = None, dtype=None) -> int:
+        """Resolve the tuned tile size for one (routine, shape, dtype).
+
+        Consults the tuning cache (topology fingerprint + routine +
+        shape bucket + dtype); on a miss, sweeps candidate
+        ``(tile, n_streams, policy)`` configs through metadata-only
+        shadow runs on the virtual clock and caches the winner.  With
+        ``auto_tune=True`` and a still-cold context the tuned
+        scheduling knobs are also adopted (see :meth:`tuning_report`).
+        This is what ``tile="auto"`` calls under the hood; batched
+        entry points use it to resolve one tile for a whole batch."""
+        self._check_open()
+        with self._lock:
+            dt = self._resolve_dtype(dtype)
+            best = self._get_tuner().tune(
+                routine, m, k, n, dtype=dt if dt is not None else np.float64)
+            self._maybe_adopt_schedule(best)
+            return best.tile
+
+    def _maybe_adopt_schedule(self, best) -> None:
+        """Adopt the tuned ``(n_streams, policy)`` by rebuilding the
+        runtime — only with ``auto_tune=True``, only on a context that
+        owns its runtime, and only while it is still cold (nothing
+        executed, so no warm cache or ledger is lost).  The first
+        tuned call pins the schedule; later calls tune tiles only."""
+        if not self._auto_tune or not self._owns_runtime:
+            return
+        if self.runtime.runs > 0 or self.n_calls > 0:
+            return
+        if (best.n_streams == self.cfg.n_streams
+                and best.policy == self.cfg.policy):
+            return
+        cfg = dataclasses.replace(self.cfg, n_streams=best.n_streams,
+                                  rs_slots=None, policy=best.policy)
+        self.runtime = BlasxRuntime(cfg)
+        self.cfg = cfg
+
+    def _tile_arg(self, tile, routine: str, m: int, k: int, n: int,
+                  dtype, operands) -> Optional[int]:
+        """Resolve a routine's ``tile=`` argument, which may be an int
+        (as ever), ``"auto"`` (tune this call), or ``None`` — which
+        under ``auto_tune=True`` tunes too, unless an operand is a
+        :class:`MatrixHandle` (its tile is pinned by the warm-cache
+        contract; re-tiling behind the caller would break it)."""
+        if isinstance(tile, str):
+            if tile != "auto":
+                raise ValueError(f"tile must be an int or 'auto', "
+                                 f"got {tile!r}")
+        elif not (tile is None and self._auto_tune and not any(
+                isinstance(x, MatrixHandle) for x in operands)):
+            return tile
+        if dtype is None:
+            # tune at the operands' storage precision (it halves/doubles
+            # the modeled byte volume); fall back to f64 for exotic
+            # legacy dtypes outside the registry
+            try:
+                dt = _array_of(operands[0]).dtype
+                for x in operands[1:]:
+                    dt = promote_dtypes(dt, _array_of(x).dtype)
+                dtype = canonical_dtype(dt)
+            except Exception:
+                dtype = np.float64
+        return self.auto_tile(routine, m, k, n, dtype=dtype)
+
+    def tuning_report(self) -> Dict[str, object]:
+        """Introspection for the autotuner: fingerprint, sweep/cache
+        counters, candidate spaces, the per-key tuning decisions this
+        context made, and the schedule knobs currently applied."""
+        with self._lock:
+            if self._tuner is None:
+                return {"enabled": self._auto_tune, "sweeps": 0,
+                        "cache_hits": 0, "cache_entries": 0, "entries": []}
+            rep = self._get_tuner().report()
+            rep["enabled"] = self._auto_tune
+            rep["applied"] = {"tile_default": self.tile_size,
+                              "n_streams": self.cfg.n_streams,
+                              "policy": self.cfg.policy}
+            return rep
+
     # ======================================================== L3 routines
     def gemm(self, A: ArrayLike, B: ArrayLike, C: Optional[ArrayLike] = None,
              *, alpha: float = 1.0, beta: float = 0.0,
@@ -472,6 +593,12 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            a_sh, b_sh = _shape_of(A), _shape_of(B)
+            tile = self._tile_arg(
+                tile, "gemm",
+                a_sh[0] if transa == "N" else a_sh[1],
+                a_sh[1] if transa == "N" else a_sh[0],
+                b_sh[1] if transb == "N" else b_sh[0], dt, (A, B))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             Bh = self._coerce(B, "B", tile, eph, dt, strict)
@@ -505,6 +632,9 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            a_sh = _shape_of(A)
+            nt, kt = (a_sh if trans == "N" else a_sh[::-1])
+            tile = self._tile_arg(tile, "syrk", nt, kt, nt, dt, (A,))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             n = Ah.shape[0] if trans == "N" else Ah.shape[1]
@@ -528,6 +658,9 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            a_sh = _shape_of(A)
+            nt, kt = (a_sh if trans == "N" else a_sh[::-1])
+            tile = self._tile_arg(tile, "syr2k", nt, kt, nt, dt, (A, B))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             Bh = self._coerce(B, "B", tile, eph, dt, strict)
@@ -577,6 +710,9 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            b_sh = _shape_of(B)
+            tile = self._tile_arg(tile, "symm", b_sh[0], b_sh[0], b_sh[1],
+                                  dt, (A, B))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             Bh = self._coerce(B, "B", tile, eph, dt, strict)
@@ -615,6 +751,9 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            b_sh = _shape_of(B)
+            tile = self._tile_arg(tile, "trmm", b_sh[0], b_sh[0], b_sh[1],
+                                  dt, (A, B))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             Bh = self._coerce(B, "B", tile, eph, dt, strict)
@@ -655,6 +794,9 @@ class BlasxContext:
         dt = self._resolve_dtype(dtype)
         strict = dtype is not None
         with self._lock:
+            b_sh = _shape_of(B)
+            tile = self._tile_arg(tile, "trsm", b_sh[0], b_sh[0], b_sh[1],
+                                  dt, (A, B))
             eph: List[MatrixHandle] = []
             Ah = self._coerce(A, "A", tile, eph, dt, strict)
             Bh = self._coerce(B, "B", tile, eph, dt, strict)
@@ -772,6 +914,15 @@ class BlasxContext:
 
 def _array_of(x: ArrayLike) -> np.ndarray:
     return x.array() if isinstance(x, MatrixHandle) else np.asarray(x)
+
+
+def _shape_of(x: ArrayLike):
+    """2-D shape of an operand without coercing it (tile resolution
+    needs dims before tiling can happen)."""
+    sh = x.shape if isinstance(x, MatrixHandle) else np.asarray(x).shape
+    if len(sh) != 2:
+        raise ValueError(f"operand must be 2-D, got shape {sh}")
+    return tuple(sh)
 
 
 # ---------------------------------------------------------- default context

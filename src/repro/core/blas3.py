@@ -13,6 +13,11 @@ the transpose identities (op(A)^T X^T = alpha B^T), mirroring the
 paper's §III-C trick at matrix granularity — the reduction happens
 inside the context methods.
 
+``tile=`` accepts an int (default 256) or ``"auto"``: the latter
+resolves the tile size through the runtime autotuner
+(``repro.tuning``) per (routine, shape bucket, dtype) — the sweep runs
+once on the virtual clock and every later call is a tuning-cache hit.
+
 Every routine also has a ``ref_*`` oracle (pure numpy) used by the
 test suite and benchmarks.  For handle-based chaining, async
 submission and the CBLAS layer, use ``repro.api`` directly.

@@ -40,6 +40,10 @@ class MesixDirectory:
                 self._group_of[dev] = gid
         for dev in range(n_devices):
             self._group_of.setdefault(dev, -1 - dev)  # isolated device
+        # least-recently-served order for L2 peer selection: device ->
+        # monotonic tick of its last P2P serve (absent = never served)
+        self._served: Dict[int, int] = {}
+        self._serve_tick = 0
         # instrumentation
         self.writebacks = 0
         self.invalidations = 0
@@ -58,14 +62,32 @@ class MesixDirectory:
 
     def peer_holder(self, key: TileKey, device_id: int) -> Optional[int]:
         """L2 tile-cache lookup: a device in the *same* P2P group holding
-        the tile (excluding the requester).  Returns the first such
-        device or None (=> must fetch from host)."""
+        the tile (excluding the requester), or None (=> fetch from host).
+
+        Among multiple eligible holders the *least-recently-served* one
+        is chosen (ties break toward the lowest id, so the pick stays
+        deterministic).  Always answering the lowest id — the old
+        behaviour — funnelled every L2 hit through one device and
+        drained its D2D egress lane while its peers' lanes sat idle
+        (skewed ``d2d_served_s``/``d2d_busy_s`` in the event-engine
+        ledger).  The query itself is read-only; the runtime reports an
+        actual P2P fetch via :meth:`mark_served`, which is what rotates
+        the order."""
         gid = self._group_of[device_id]
         with self._lock:
-            for dev in sorted(self._holders.get(key, ())):
-                if dev != device_id and self._group_of[dev] == gid:
-                    return dev
-            return None
+            eligible = [dev for dev in self._holders.get(key, ())
+                        if dev != device_id and self._group_of[dev] == gid]
+            if not eligible:
+                return None
+            return min(eligible,
+                       key=lambda dev: (self._served.get(dev, -1), dev))
+
+    def mark_served(self, device_id: int) -> None:
+        """Record that ``device_id`` just served a P2P fetch, moving it
+        to the back of the least-recently-served order."""
+        with self._lock:
+            self._serve_tick += 1
+            self._served[device_id] = self._serve_tick
 
     def same_group(self, a: int, b: int) -> bool:
         return self._group_of[a] == self._group_of[b]

@@ -57,12 +57,18 @@ MAX_TRACE_SPANS = 1_000_000
 
 @dataclasses.dataclass(frozen=True)
 class TimedXfer:
-    """One modeled transfer: direction, payload and link seconds."""
+    """One modeled transfer: direction, payload and link seconds.
+
+    ``src`` names the *serving* device of a P2P (d2d) transfer; the
+    engine then reserves the server's egress lane, so contention lands
+    on the device actually being drained.  ``-1`` (h2d/d2h, or legacy
+    callers) keeps the transfer on the requester's own lane."""
 
     kind: str       # "h2d" | "d2d" | "d2h"
     nbytes: int
     secs: float
     label: str = ""
+    src: int = -1   # serving device of a d2d transfer (-1 = requester)
 
 
 @dataclasses.dataclass
@@ -305,10 +311,19 @@ class EventEngine:
     def _xfer(self, device: int, x: TimedXfer, cursor: float,
               busy: Dict[str, float], task_id: int) -> float:
         """Acquire the link for one transfer, charge busy seconds and
-        emit its span; returns the granted start time."""
-        s = self._link(x.kind, device).acquire(cursor, x.secs)
+        emit its span; returns the granted start time.
+
+        A d2d transfer with a known source rides the *serving* device's
+        egress lane (and its span lands on that device's d2d track in
+        the trace): one over-popular holder now serializes its peers'
+        fetches, which is exactly the drain the LRU peer rotation in
+        ``MesixDirectory.peer_holder`` spreads out.  The busy-seconds
+        charge stays with the requesting device's ledger — it is the
+        one whose task waited on the wire."""
+        lane_dev = x.src if (x.kind == "d2d" and x.src >= 0) else device
+        s = self._link(x.kind, lane_dev).acquire(cursor, x.secs)
         busy[x.kind] += x.secs
-        self._emit(device, LINK_LANES[x.kind], x.kind,
+        self._emit(lane_dev, LINK_LANES[x.kind], x.kind,
                    f"{x.kind} {x.label}", s, x.secs, x.nbytes, task_id)
         return s
 

@@ -144,6 +144,7 @@ class BlasxHeap:
         offset = 0
         used = 0
         prev_free = False
+        walked_occ = set()
         while seg is not None:
             if seg.offset != offset:
                 raise HeapError(f"segment offset {seg.offset} != expected {offset}")
@@ -152,6 +153,7 @@ class BlasxHeap:
             if seg.occupied:
                 if self._occupied.get(seg.offset) is not seg:
                     raise HeapError("occupied table out of sync")
+                walked_occ.add(seg.offset)
                 used += seg.length
                 prev_free = False
             else:
@@ -164,6 +166,13 @@ class BlasxHeap:
             raise HeapError(f"segments cover {offset} != capacity {self.capacity}")
         if used != self._used:
             raise HeapError(f"used accounting {self._used} != actual {used}")
-        n_occ = sum(1 for _ in self._occupied)
-        if n_occ != len(self._occupied):
-            raise HeapError("occupied table corrupted")
+        # the table must hold exactly the occupied segments the walk saw:
+        # the per-segment identity check above catches missing/aliased
+        # entries, but only a cross-check against the walked set catches
+        # stale entries for segments no longer (or never) in the list
+        stale = set(self._occupied) - walked_occ
+        if stale:
+            raise HeapError(
+                f"occupied table has {len(stale)} stale entr"
+                f"{'y' if len(stale) == 1 else 'ies'} not backed by any "
+                f"occupied segment: offsets {sorted(stale)[:8]}")

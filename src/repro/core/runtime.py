@@ -168,6 +168,26 @@ class RuntimeConfig:
     def effective_streams(self) -> int:
         return 2 if self.policy == "cublasxt" else self.n_streams
 
+    def topology(self) -> Dict[str, object]:
+        """The fields that describe the *machine* this config models —
+        device count/speeds, P2P grouping, link bandwidths, cache and
+        compute capacity — excluding the knobs the runtime autotuner
+        searches (tile size, ``n_streams``, ``policy``) and anything
+        that cannot change modeled time (seed, trace recording).  The
+        tuning layer fingerprints this dict: two configs with equal
+        topologies share one tuning-cache namespace."""
+        return {
+            "n_devices": self.n_devices,
+            "speeds": list(self.speeds),
+            "nominal_speeds": list(self.nominal_speeds),
+            "p2p_groups": [list(g) for g in self.p2p_groups],
+            "cache_bytes": self.cache_bytes,
+            "peak_flops": self.peak_flops,
+            "h2d_bw": self.h2d_bw,
+            "d2d_bw": self.d2d_bw,
+            "shared_host_link": self.shared_host_link,
+        }
+
 
 class DeviceSim:
     """One simulated accelerator: private heap + ALRU (L1 tile cache) +
@@ -185,6 +205,10 @@ class DeviceSim:
         self.rs = ReservationStation(device_id, cfg.rs_slots)
         self.clock = 0.0  # sim-mode virtual time
         self._directory = directory
+        # guards cross-thread writes into THIS device's ledger (threads
+        # mode: a peer's worker charges d2d_served_s on an L2 fetch;
+        # every other ledger write comes from the owning worker only)
+        self.serve_lock = threading.Lock()
 
         def _on_evict(dev_id: int, key: TileKey) -> None:
             directory.on_evict(key, dev_id)
@@ -451,7 +475,13 @@ class BlasxRuntime:
             victim = max((x for x in self.devices if x is not d),
                          key=lambda x: len(x.rs), default=None)
             if victim is not None and len(victim.rs) > 0:
-                stolen = victim.rs.steal()
+                # refresh the victim station's priorities against the
+                # VICTIM's current cache state (Eq. 3): put-time values
+                # are stale once tiles landed in its L1/L2, and a stale
+                # sort would let the thief walk off with an L1-hot task
+                prio_fn = ((lambda t: self._priority(victim, t))
+                           if self.cfg.use_priority else None)
+                stolen = victim.rs.steal(prio_fn)
                 if stolen is not None:
                     d.rs.put(stolen, self._priority(d, stolen))
                     d.ledger.steals += 1
@@ -747,7 +777,17 @@ class BlasxRuntime:
                 d.ledger.d2d_bytes += nbytes
                 secs = self._xfer_secs("d2d", nbytes)
                 xfers.append(TimedXfer("d2d", nbytes, secs,
-                                       _tile_label(key)))
+                                       _tile_label(key), src=peer))
+                # egress accounting + LRU rotation on the SERVING side:
+                # the peer's lane is the one being drained, and marking
+                # the serve is what spreads the next hit to its
+                # least-recently-used group mate.  The charge targets
+                # ANOTHER device's ledger, so in threads mode it must
+                # not race that device's own read-modify-writes.
+                srv = self.devices[peer]
+                with srv.serve_lock:
+                    srv.ledger.d2d_served_s += secs
+                self.directory.mark_served(peer)
             else:                    # miss in both levels: host fetch
                 payload = (mat.read_tile(key.i, key.j).copy()
                            if self.cfg.execute else _METADATA_ONLY)

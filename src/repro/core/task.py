@@ -50,6 +50,11 @@ class Ledger:
     h2d_busy_s: float = 0.0
     d2d_busy_s: float = 0.0
     d2h_busy_s: float = 0.0
+    # P2P seconds this device spent *serving* peers' L2 hits from its
+    # own store (the egress side of d2d traffic; charged in both time
+    # models).  A skew here means one holder is being drained while
+    # its peers idle — the pathology the LRU peer rotation fixes.
+    d2d_served_s: float = 0.0
     # batched-dispatch accounting (execute=True runs only): how many
     # k-steps went through the backend, how many grouped dispatches
     # they collapsed into, and what each engine actually executed —

@@ -152,12 +152,24 @@ class ReservationStation:
             self._prio.clear()
             return taken
 
-    def steal(self) -> Optional[Task]:
+    def steal(self, prio_fn=None) -> Optional[Task]:
         """A peer steals the *lowest*-priority task — the one with the
-        least locality value to this device."""
+        least locality value to this station's device.
+
+        ``prio_fn`` re-evaluates each buffered task's priority (Eq. 3)
+        against the device's *current* L1/L2 cache state before the
+        victim is chosen.  Put-time priorities go stale as caches fill
+        (``_fill_and_take`` only refreshes the thief's own station), so
+        selecting on them could hand the thief a task whose input tiles
+        are by now L1-hot here — the exact traffic stealing is meant to
+        avoid.  Without ``prio_fn`` the stored priorities are used
+        (FIFO-priority policies, unit tests)."""
         with self._lock:
             if not self._slots:
                 return None
+            if prio_fn is not None:
+                for t in self._slots:
+                    self._prio[t.task_id] = prio_fn(t)
             self._slots.sort(key=lambda t: self._prio[t.task_id], reverse=True)
             victim = self._slots.pop()
             self._prio.pop(victim.task_id, None)

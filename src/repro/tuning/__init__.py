@@ -1,0 +1,20 @@
+"""repro.tuning — shape-adaptive runtime autotuning (paper Fig. 10).
+
+Sweeps candidate ``(tile, n_streams, policy)`` configurations through
+metadata-only shadow runs on the discrete-event virtual clock and
+caches the winner per ``(topology fingerprint, backend, routine, shape
+bucket, dtype)``.  Wired into the API stack via
+``BlasxContext(auto_tune=True)`` and ``tile="auto"`` on every surface;
+see ``docs/ARCHITECTURE.md`` for the cache layout.
+"""
+from .autotuner import (Autotuner, TunedConfig, cache_key, shape_bucket,
+                        topology_fingerprint)
+from .cache import (ENV_CACHE_PATH, TuningCache, reset_shared_cache,
+                    resolve_cache, shared_cache)
+
+__all__ = [
+    "Autotuner", "TunedConfig", "TuningCache",
+    "shape_bucket", "topology_fingerprint", "cache_key",
+    "shared_cache", "reset_shared_cache", "resolve_cache",
+    "ENV_CACHE_PATH",
+]

@@ -1,0 +1,154 @@
+"""Persistent tuning cache — the autotuner's memory.
+
+One entry per ``(topology fingerprint, backend, routine, shape bucket,
+dtype)`` key, holding the winning ``(tile, n_streams, policy)`` plus
+the shadow-sweep evidence (per-candidate virtual-clock makespans).
+Entries live in process memory and, when a path is configured, in a
+JSON file so the search runs once per machine — every later
+``BlasxContext`` (or process) starts warm and performs **zero**
+shadow-run sweeps for known keys.
+
+Resolution order for the backing file:
+
+* an explicit ``path=`` (``BlasxContext(tuning_cache="...")``,
+  ``TuningCache("...")``),
+* else the ``BLASX_TUNING_CACHE`` environment variable (the CI bench
+  lane sets it to upload the cache as an artifact),
+* else memory-only (no file is ever written).
+
+``shared_cache()`` returns the process-wide instance used by default:
+two contexts with the same topology share it, which is what makes the
+second context a pure cache hit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+ENV_CACHE_PATH = "BLASX_TUNING_CACHE"
+CACHE_SCHEMA = 1
+
+
+class TuningCache:
+    """Thread-safe key -> entry store with optional JSON persistence.
+
+    Entries are plain dicts (JSON-serializable); the autotuner owns
+    their shape.  ``hits``/``misses`` count lookups for the
+    ``tuning_report`` surface.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path if path is not None else \
+            os.environ.get(ENV_CACHE_PATH) or None
+        # reentrant: put() holds the lock through save()'s file write so
+        # concurrent puts cannot interleave on one tmp file
+        self._lock = threading.RLock()
+        self._entries: Dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        if self.path and os.path.exists(self.path):
+            self.load(self.path)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return sorted(self._entries)
+
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return dict(entry)
+
+    def put(self, key: str, entry: dict) -> None:
+        """Store an entry and persist immediately when file-backed (a
+        crash between sweeps then loses at most nothing).  The lock is
+        held through the write — concurrent puts serialize instead of
+        interleaving on one tmp file."""
+        with self._lock:
+            self._entries[key] = dict(entry)
+            if self.path:
+                self.save(self.path)
+
+    def load(self, path: str) -> int:
+        """Merge entries from a JSON cache file; returns how many were
+        loaded.  Unknown schemas and unreadable/corrupt files are
+        ignored rather than trusted — a damaged cache degrades to a
+        re-sweep, never to a crash loop at context construction."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return 0
+        if not isinstance(data, dict) or data.get("schema") != CACHE_SCHEMA:
+            return 0
+        entries = data.get("entries", {})
+        if not isinstance(entries, dict):
+            return 0
+        with self._lock:
+            self._entries.update(entries)
+            return len(entries)
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("TuningCache has no backing path")
+        tmp = f"{path}.tmp"
+        with self._lock:
+            with open(tmp, "w") as f:
+                json.dump({"schema": CACHE_SCHEMA,
+                           "entries": self._entries}, f, indent=2,
+                          sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, path)
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+# --------------------------------------------------- process-shared default
+_shared: Optional[TuningCache] = None
+_shared_lock = threading.Lock()
+
+
+def shared_cache() -> TuningCache:
+    """The process-wide default cache (memory-backed unless
+    ``BLASX_TUNING_CACHE`` is set): every ``BlasxContext(auto_tune=True)``
+    without an explicit ``tuning_cache=`` shares it."""
+    global _shared
+    with _shared_lock:
+        if _shared is None:
+            _shared = TuningCache()
+        return _shared
+
+
+def reset_shared_cache() -> None:
+    """Drop the process-wide cache (test isolation)."""
+    global _shared
+    with _shared_lock:
+        _shared = None
+
+
+def resolve_cache(spec) -> TuningCache:
+    """``None`` -> process-shared, ``str`` -> file-backed, instance ->
+    itself (the ``tuning_cache=`` coercion used by the context layer)."""
+    if spec is None:
+        return shared_cache()
+    if isinstance(spec, TuningCache):
+        return spec
+    if isinstance(spec, (str, os.PathLike)):
+        return TuningCache(os.fspath(spec))
+    raise TypeError(f"tuning_cache must be None, a path or a TuningCache, "
+                    f"got {type(spec).__name__}")

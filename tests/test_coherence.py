@@ -104,13 +104,37 @@ def test_peer_holder_never_crosses_p2p_groups():
     assert all(d.peer_holder(k, r) is None for r in range(5))
 
 
-def test_peer_holder_picks_lowest_device_in_group():
+def test_peer_holder_rotates_least_recently_served():
+    """Regression: peer_holder used to always answer the lowest
+    same-group id, draining one device's D2D lane.  It now answers the
+    least-recently-served eligible holder (ties toward the lowest id),
+    and the query itself is read-only — only mark_served rotates."""
     d = MesixDirectory(4, [[0, 1, 2, 3]])
     k = _key(3)
     d.on_fill(k, 3)
     d.on_fill(k, 1)
-    assert d.peer_holder(k, 0) == 1
+    assert d.peer_holder(k, 0) == 1    # never served: lowest id wins
+    assert d.peer_holder(k, 0) == 1    # pure query: no rotation
     assert d.peer_holder(k, 1) == 3    # self excluded
+    d.mark_served(1)                   # device 1 actually served a fetch
+    assert d.peer_holder(k, 0) == 3    # 3 is now least-recently-served
+    d.mark_served(3)
+    assert d.peer_holder(k, 0) == 1    # back to 1: round-robin emerges
+
+
+def test_peer_holder_serves_spread_evenly_across_holders():
+    """A tile held by three peers serves a stream of fetches 1/3 each
+    when the requester marks every serve (the runtime's contract)."""
+    d = MesixDirectory(4, [[0, 1, 2, 3]])
+    k = _key(0)
+    for holder in (0, 1, 2):
+        d.on_fill(k, holder)
+    served = {0: 0, 1: 0, 2: 0}
+    for _ in range(9):
+        peer = d.peer_holder(k, 3)
+        served[peer] += 1
+        d.mark_served(peer)
+    assert served == {0: 3, 1: 3, 2: 3}
 
 
 # ------------------------------------------------------------ concurrency

@@ -1,12 +1,15 @@
 """ReadyQueue edge-case coverage (paper §IV-C): the dequeue_wait
 spurious-wakeup contract, crash-recovery requeue exactly-once
-semantics, and dependency-gated enqueue of dependents."""
+semantics, dependency-gated enqueue of dependents, and the
+steal-time priority refresh (Eq. 3 against current cache state)."""
 import threading
 import time
 
 import pytest
 
-from repro.core.task import Task
+from repro.core.alru import Alru
+from repro.core.heap import BlasxHeap
+from repro.core.task import Step, Task, TileRef
 from repro.core.taskqueue import ReadyQueue, ReservationStation
 from repro.core.tiling import TileKey
 
@@ -114,6 +117,60 @@ def test_rs_drain_then_requeue_roundtrip():
         q.complete(t)
     assert seen == {0, 1, 2, 3}
     assert q.drained()
+
+
+# ------------------------------------------------- steal priority refresh
+def _tile_task(tid, matrix_id):
+    """A task whose single k-step reads two tiles of ``matrix_id``."""
+    return Task(task_id=tid, routine="gemm", out=TileKey("C", tid, 0),
+                i=tid, j=0,
+                steps=(Step(TileRef(TileKey(matrix_id, 0, 0)),
+                            TileRef(TileKey(matrix_id, 0, 1))),),
+                alpha=1.0, beta=0.0)
+
+
+def test_steal_refreshes_priorities_against_current_cache_state():
+    """Regression (paper Eq. 3): the victim RS holds put-time
+    priorities recorded while its cache was cold (everything 0).  The
+    victim's L1 then fills with task B's input tiles, making B the
+    task the victim most wants to keep — but the stale table still
+    says both tasks are worthless, and pre-fix ``steal()`` walked off
+    with B (the L1-hot task).  With the refresh hook the thief gets
+    the genuinely coldest task A."""
+    heap = BlasxHeap(1 << 20)
+    victim_l1 = Alru(0, heap)
+    victim_l1.on_evict = lambda dev, key: None
+
+    a, b = _tile_task(0, "X"), _tile_task(1, "Y")
+    rs = ReservationStation(0, 4)
+    rs.put(a, 0.0)   # put-time: victim cache cold, both priorities 0
+    rs.put(b, 0.0)
+
+    # the victim's cache warms up with B's tiles AFTER the puts
+    for ref in b.input_refs():
+        blk = victim_l1.translate(ref.key, 64)
+        assert blk is not None
+        victim_l1.release(ref.key)
+
+    def eq3(t):  # +2 per L1-resident input tile (runtime._priority)
+        return sum(2.0 for ref in t.input_refs() if ref.key in victim_l1)
+
+    stolen = rs.steal(eq3)
+    assert stolen is a, "steal took the victim's L1-hot task"
+    # the hot task stays home and is what the victim executes next
+    assert rs.take_top(1) == [b]
+
+
+def test_steal_without_refresh_uses_stored_priorities():
+    """FIFO-priority policies (no Eq. 3) keep the old contract: the
+    stored lowest-priority slot is the victim."""
+    rs = ReservationStation(0, 4)
+    hi, lo = _task(0), _task(1)
+    rs.put(hi, 5.0)
+    rs.put(lo, 1.0)
+    assert rs.steal() is lo
+    assert rs.steal() is hi
+    assert rs.steal() is None
 
 
 # ----------------------------------------------------- dependency gating

@@ -1,0 +1,277 @@
+"""Runtime autotuner coverage (repro.tuning + the tile="auto" wiring):
+cache hit on a second context, shape-bucket reuse, deterministic
+picks, tuned <= default, JSON persistence, and every API surface."""
+import numpy as np
+import pytest
+
+from repro.api import BlasxContext
+from repro.core import blas3
+from repro.core.runtime import RuntimeConfig
+from repro.tuning import (Autotuner, TuningCache, cache_key,
+                          reset_shared_cache, shape_bucket,
+                          topology_fingerprint)
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_shared_cache():
+    """Isolate the process-wide default cache between tests."""
+    reset_shared_cache()
+    yield
+    reset_shared_cache()
+
+
+def _cfg(**kw):
+    kw.setdefault("n_devices", 2)
+    kw.setdefault("mode", "sim")
+    kw.setdefault("cache_bytes", 256 << 20)
+    return RuntimeConfig(**kw)
+
+
+def _shadow_cfg(**kw):
+    kw.setdefault("execute", False)
+    kw.setdefault("record_trace", False)
+    return _cfg(**kw)
+
+
+# -------------------------------------------------------------- the search
+def test_tuned_makespan_never_worse_than_default():
+    """Acceptance: on Fig. 10-style sweep shapes the tuned config's
+    virtual-clock makespan is <= the fixed default's for every routine
+    and both precisions (the default is always candidate zero)."""
+    tuner = Autotuner(_shadow_cfg(n_devices=3), cache=TuningCache(),
+                      tiles=(128, 256, 512), streams=(2, 4),
+                      policies=("blasx", "static"))
+    for routine in ("gemm", "syrk", "syr2k", "symm", "trmm", "trsm"):
+        for dtype in ("float64", "float32"):
+            best = tuner.tune(routine, 1024, 1024, 1024, dtype=dtype)
+            assert best.makespan <= best.default_makespan * (1 + 1e-12), \
+                (routine, dtype)
+            assert best.source == "swept"
+
+
+def test_tuned_pick_is_deterministic_across_tuners():
+    """Same topology + same seed -> bitwise-identical pick from two
+    independent tuners with separate caches."""
+    picks = []
+    for _ in range(2):
+        tuner = Autotuner(_shadow_cfg(n_devices=3, seed=7),
+                          cache=TuningCache())
+        best = tuner.tune("gemm", 2048, 2048, 2048, dtype="float64")
+        picks.append((best.tile, best.n_streams, best.policy,
+                      best.makespan, best.default_makespan))
+    assert picks[0] == picks[1]
+
+
+def test_shape_bucket_reuse():
+    """Shapes in one power-of-two bucket share a cache entry: the
+    second tune performs zero shadow runs."""
+    assert shape_bucket(1000, 1000, 1000) == (1024, 1024, 1024)
+    assert shape_bucket(1, 1, 1) == (64, 64, 64)
+    tuner = Autotuner(_shadow_cfg(), cache=TuningCache(),
+                      tiles=(128, 256), streams=(2,), policies=("blasx",))
+    first = tuner.tune("gemm", 1000, 900, 1020)
+    swept = tuner.sweeps
+    assert swept > 0
+    again = tuner.tune("gemm", 1024, 1024, 1024)
+    assert tuner.sweeps == swept            # pure cache hit
+    assert again.source == "cache"
+    assert (again.tile, again.n_streams) == (first.tile, first.n_streams)
+
+
+def test_fingerprint_separates_topologies_not_knobs():
+    """The fingerprint keys on the machine, not the searched knobs."""
+    base = _shadow_cfg(n_devices=2)
+    assert topology_fingerprint(base) == topology_fingerprint(
+        _shadow_cfg(n_devices=2, n_streams=8, policy="static"))
+    assert topology_fingerprint(base) != topology_fingerprint(
+        _shadow_cfg(n_devices=3))
+    assert topology_fingerprint(base) != topology_fingerprint(
+        _shadow_cfg(n_devices=2, h2d_bw=1e12))
+    key = cache_key("f", "numpy", "gemm", (64, 64, 64), "float64")
+    assert key == "f/numpy/gemm/64x64x64/float64"
+
+
+def test_cache_file_roundtrip(tmp_path):
+    """A file-backed cache persists across tuner (and process) lives."""
+    path = str(tmp_path / "tuning.json")
+    t1 = Autotuner(_shadow_cfg(), cache=path, tiles=(128, 256),
+                   streams=(2,), policies=("blasx",))
+    best = t1.tune("syrk", 512, 512, 512)
+    assert t1.sweeps > 0
+    # a second, cold cache object backed by the same file
+    t2 = Autotuner(_shadow_cfg(), cache=TuningCache(path), tiles=(128, 256),
+                   streams=(2,), policies=("blasx",))
+    again = t2.tune("syrk", 512, 512, 512)
+    assert t2.sweeps == 0 and again.source == "cache"
+    assert again.tile == best.tile
+    assert again.makespan == best.makespan
+
+
+def test_cache_ignores_unknown_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema": 999, "entries": {"x": {}}}')
+    cache = TuningCache(str(path))
+    assert len(cache) == 0
+
+
+def test_corrupt_cache_file_degrades_to_resweep(tmp_path):
+    """A truncated/garbage cache file must never crash context
+    construction — it degrades to a fresh sweep and is overwritten."""
+    path = tmp_path / "corrupt.json"
+    path.write_text('{"schema": 1, "entries": {"x"')   # truncated JSON
+    tuner = Autotuner(_shadow_cfg(), cache=str(path), tiles=(128,),
+                      streams=(2,), policies=("blasx",))
+    best = tuner.tune("gemm", 256, 256, 256)
+    assert tuner.sweeps > 0 and best.source == "swept"
+    # the overwritten file round-trips cleanly now
+    assert len(TuningCache(str(path))) == 1
+
+
+def test_entry_from_different_candidate_space_is_not_reused(tmp_path):
+    """A cache entry swept under a restricted candidate space (or a
+    different default config) must not satisfy a tuner whose
+    tuned<=default guarantee refers to a different default — it
+    re-sweeps instead of serving someone else's verdict."""
+    path = str(tmp_path / "t.json")
+    narrow = Autotuner(_shadow_cfg(), cache=path, tiles=(128,),
+                       streams=(2,), policies=("blasx",), default_tile=128)
+    narrow.tune("gemm", 512, 512, 512)
+    wide = Autotuner(_shadow_cfg(), cache=TuningCache(path),
+                     tiles=(128, 256), streams=(2, 4),
+                     policies=("blasx",), default_tile=256)
+    best = wide.tune("gemm", 512, 512, 512)
+    assert wide.sweeps > 0 and best.source == "swept"
+    assert best.makespan <= best.default_makespan * (1 + 1e-12)
+    # same-space tuner after the overwrite: pure hit again
+    wide2 = Autotuner(_shadow_cfg(), cache=TuningCache(path),
+                      tiles=(128, 256), streams=(2, 4),
+                      policies=("blasx",), default_tile=256)
+    assert wide2.tune("gemm", 512, 512, 512).source == "cache"
+    assert wide2.sweeps == 0
+
+
+# ------------------------------------------------------------ context layer
+def test_second_context_same_topology_is_pure_cache_hit():
+    """Acceptance: the first auto-tuned context sweeps; a second
+    context with the same topology performs ZERO shadow-run sweeps."""
+    A = RNG.standard_normal((260, 260))
+    B = RNG.standard_normal((260, 260))
+    with BlasxContext(_cfg(), auto_tune=True) as ctx1:
+        out = ctx1.gemm(A, B, tile="auto")
+        np.testing.assert_allclose(out.array(), A @ B, rtol=1e-10,
+                                   atol=1e-10)
+        rep1 = ctx1.tuning_report()
+        assert rep1["sweeps"] > 0 and rep1["cache_hits"] == 0
+    with BlasxContext(_cfg(), auto_tune=True) as ctx2:
+        out = ctx2.gemm(A, B, tile="auto")
+        np.testing.assert_allclose(out.array(), A @ B, rtol=1e-10,
+                                   atol=1e-10)
+        rep2 = ctx2.tuning_report()
+        assert rep2["sweeps"] == 0 and rep2["cache_hits"] == 1
+        assert rep2["entries"][0]["source"] == "cache"
+        assert rep2["fingerprint"] == rep1["fingerprint"]
+
+
+def test_auto_tune_default_applies_to_raw_arrays_only():
+    """auto_tune=True tunes tile=None raw-array calls, but a handle's
+    tile is pinned (re-tiling would break the warm-cache contract)."""
+    A = RNG.standard_normal((300, 300))
+    with BlasxContext(_cfg(), auto_tune=True, tile=100) as ctx:
+        Ah = ctx.tile(A)                 # pinned at the context default
+        out = ctx.gemm(Ah, Ah)           # no tuning: handle wins
+        assert out.tile == 100
+        assert ctx.tuning_report()["sweeps"] == 0
+        out2 = ctx.syrk(A)               # raw array: tuned
+        rep = ctx.tuning_report()
+        assert rep["sweeps"] > 0
+        assert out2.tile == rep["entries"][-1]["tile"]
+
+
+def test_tile_auto_conflicts_with_mismatched_handle():
+    A = RNG.standard_normal((300, 300))
+    with BlasxContext(_cfg(), tile=100) as ctx:
+        Ah = ctx.tile(A)
+        tuned = ctx.auto_tile("gemm", 300, 300, 300)
+        if tuned != Ah.tile:
+            with pytest.raises(ValueError, match="tile"):
+                ctx.gemm(Ah, Ah, tile="auto")
+
+
+def test_ctx_tile_rejects_auto_and_bad_strings():
+    with BlasxContext(_cfg()) as ctx:
+        with pytest.raises(ValueError, match="auto_tile"):
+            ctx.tile(np.eye(8), tile="auto")
+        with pytest.raises(ValueError, match="int or 'auto'"):
+            ctx.gemm(np.eye(8), np.eye(8), tile="widest")
+
+
+def test_cold_context_adopts_tuned_schedule():
+    """With auto_tune=True the first tuned call on a still-cold
+    context applies the tuned (n_streams, policy); the tuner's pick
+    and the applied config must agree."""
+    A = RNG.standard_normal((520, 520))
+    with BlasxContext(_cfg(), auto_tune=True) as ctx:
+        out = ctx.trsm(np.tril(A) + 520 * np.eye(520), A, uplo="L",
+                       tile="auto")
+        np.testing.assert_allclose(
+            out.array(),
+            blas3.ref_trsm(np.tril(A) + 520 * np.eye(520), A, uplo="L"),
+            rtol=1e-8, atol=1e-8)
+        entry = ctx.tuning_report()["entries"][0]
+        applied = ctx.tuning_report()["applied"]
+        assert applied["n_streams"] == entry["n_streams"]
+        assert applied["policy"] == entry["policy"]
+        assert ctx.cfg.n_streams == entry["n_streams"]
+
+
+def test_warm_context_never_reconfigures_schedule():
+    """After the first executed call the runtime (and its warm caches)
+    must survive later tuned calls untouched."""
+    A = RNG.standard_normal((300, 300))
+    with BlasxContext(_cfg(), auto_tune=True) as ctx:
+        ctx.gemm(A, A, tile=100)         # cold -> executed, caches warm
+        rt = ctx.runtime
+        ctx.gemm(A, A, tile="auto")      # tuned call on a warm context
+        assert ctx.runtime is rt         # same runtime object
+
+
+# --------------------------------------------------------- other surfaces
+def test_tile_auto_through_legacy_and_cblas_and_batch():
+    from repro.api import CblasNoTrans, CblasRowMajor, cblas_dgemm
+
+    A = RNG.standard_normal((200, 200))
+    B = RNG.standard_normal((200, 200))
+    r = blas3.gemm(A, B, tile="auto")
+    np.testing.assert_allclose(r, A @ B, rtol=1e-10, atol=1e-10)
+
+    C = np.zeros((200, 200))
+    cblas_dgemm(CblasRowMajor, CblasNoTrans, CblasNoTrans, 200, 200, 200,
+                1.0, A, 200, B, 200, 0.0, C, 200, tile="auto")
+    np.testing.assert_allclose(C, A @ B, rtol=1e-10, atol=1e-10)
+
+    with BlasxContext(_cfg(), auto_tune=True) as ctx:
+        outs = ctx.gemm_batched([A, B], [B, A], tile="auto")
+        np.testing.assert_allclose(outs[0].array(), A @ B, rtol=1e-10,
+                                   atol=1e-10)
+        np.testing.assert_allclose(outs[1].array(), B @ A, rtol=1e-10,
+                                   atol=1e-10)
+        assert outs[0].tile == outs[1].tile   # one tuned tile, whole batch
+        y = ctx.gemm_strided_batched(np.stack([A, B]), B, tile="auto")
+        np.testing.assert_allclose(y[0], A @ B, rtol=1e-10, atol=1e-10)
+
+
+def test_tile_auto_side_r_reduction():
+    A = RNG.standard_normal((96, 96))
+    B = RNG.standard_normal((64, 96))
+    r = blas3.trmm(A, B, side="R", tile="auto")
+    np.testing.assert_allclose(r, blas3.ref_trmm(A, B, side="R"),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_tuning_report_before_any_tuning():
+    with BlasxContext(_cfg()) as ctx:
+        rep = ctx.tuning_report()
+        assert rep == {"enabled": False, "sweeps": 0, "cache_hits": 0,
+                       "cache_entries": 0, "entries": []}
