@@ -18,9 +18,13 @@ Two classes of checks:
   cast — see benchmarks/backends.py), the discrete-event overlap
   lane's structural properties hold (overlap-on makespan <=
   overlap-off on every policy; blasx COMM fraction <= cublasxt — see
-  benchmarks/overlap.py), and the runtime-autotuner lane's properties
+  benchmarks/overlap.py), the runtime-autotuner lane's properties
   hold (tuned makespan <= default on every routine x dtype; the second
-  tuning pass is a pure cache hit — see benchmarks/autotune.py).
+  tuning pass is a pure cache hit — see benchmarks/autotune.py), and
+  the serving lane's flags hold (quota'd tenant isolation + its
+  fails-without counterpart, exact admission rejections, interactive
+  before batch, loaded-vs-unloaded p99 bound — see
+  benchmarks/serving.py).
 * **Regressions vs baseline** — metrics compared against
   ``benchmarks/baseline.json`` with a tolerance (default 20%; CI
   passes 35%): the jax-vs-numpy speedup ratio and the deterministic
@@ -123,6 +127,7 @@ def check_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
                   f"(speedup={summary.get('jax_f32_speedup_vs_f64')}x)")
     check_overlap_invariants(gate, pr_rows)
     check_autotune_invariants(gate, pr_rows)
+    check_serving_invariants(gate, pr_rows)
 
 
 def check_overlap_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
@@ -183,6 +188,47 @@ def check_autotune_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
     else:
         gate.note(f"OK   invariant: second tuning pass swept 0 configs "
                   f"({summary.get('cache_entries')} cached entries)")
+
+
+def check_serving_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
+    """Structural properties of the serving lane (benchmarks/serving.py).
+
+    The isolation/admission flags are deterministic (sim mode, fixed
+    seeds, single worker per context): a quota'd flood must leave the
+    other tenant's warm tile set untouched, the identical flood
+    without quotas must evict it (the fails-without-feature
+    counterpart), admission must shed exactly offered-minus-capacity
+    requests, and a queued interactive request must complete before a
+    queued batch one.  The wall-clock latency row is gated only
+    through its in-lane ``latency_isolation_ok`` flag — tenant B's
+    loaded p99 must stay within a generous ratio of its unloaded p99
+    while tenant A saturates the pool (host speed cancels)."""
+    summary = pr_rows.get("serving/summary")
+    if summary is None:
+        gate.fail("serving/summary row missing from PR report")
+        return
+    checks = (
+        ("isolation_ok",
+         "a quota'd flood must not evict the other tenant's warm set"),
+        ("flood_evicts_without_quota",
+         "without quotas the same flood must evict the warm set "
+         "(fails-without-feature counterpart)"),
+        ("rejections_exact",
+         "admission must reject exactly offered-minus-capacity "
+         "requests at the depth bound"),
+        ("interactive_first",
+         "a queued interactive request must complete before a queued "
+         "batch request"),
+        ("latency_isolation_ok",
+         "tenant B's p99 under tenant A's flood must stay within the "
+         "gated ratio of its unloaded p99"),
+    )
+    for flag, what in checks:
+        if _num(summary, flag) != 1:
+            gate.fail(f"invariant: {what} (serving/summary.{flag}="
+                      f"{summary.get(flag)})")
+        else:
+            gate.note(f"OK   invariant: serving {flag}")
 
 
 def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
@@ -257,6 +303,23 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
                              _num(pr, "default_makespan"),
                              _num(base, "default_makespan"),
                              tol, higher_is_better=False)
+    # serving lane: deterministic tile/eviction/rejection counts (sim
+    # mode, fixed seeds); the wall-clock latency row is NOT gated here
+    pr, base = both("serving/isolation")
+    if pr is not None:
+        gate.check_ratio("serving/isolation", "warm_tiles_after",
+                         _num(pr, "warm_tiles_after"),
+                         _num(base, "warm_tiles_after"),
+                         tol, higher_is_better=True)
+        gate.check_ratio("serving/isolation", "quota_evictions",
+                         _num(pr, "quota_evictions"),
+                         _num(base, "quota_evictions"),
+                         tol, higher_is_better=False)
+    pr, base = both("serving/admission")
+    if pr is not None:
+        gate.check_ratio("serving/admission", "rejected",
+                         _num(pr, "rejected"), _num(base, "rejected"),
+                         tol, higher_is_better=False)
 
 
 def main(argv=None) -> int:

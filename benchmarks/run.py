@@ -18,9 +18,10 @@ accumulate across PRs and be gated by ``benchmarks/compare.py``.
   backends       execution backends (numpy/jax/pallas batched dispatch)
   overlap        comm/compute overlap per policy (discrete-event engine)
   autotune       tuned-vs-default config search  (runtime autotuner)
+  serving        BlasxServer saturation + tenant isolation (repro.serve)
 
 ``--quick`` runs the fast deterministic subset (the CI bench-smoke
-lane): table1 + backends + overlap + autotune.
+lane): table1 + backends + overlap + autotune + serving.
 """
 from __future__ import annotations
 
@@ -33,8 +34,8 @@ import time
 
 from . import (autotune, backends, bench_context_reuse, fig5_heap,
                fig7_throughput, fig8_load_balance, fig10_tile_size, overlap,
-               pallas_kernel, table1_gemm_fraction, table4_link_model,
-               table5_comm_volume)
+               pallas_kernel, serving, table1_gemm_fraction,
+               table4_link_model, table5_comm_volume)
 from .common import rows_to_csv
 
 MODULES = [
@@ -50,6 +51,7 @@ MODULES = [
     ("context_reuse", bench_context_reuse),
     ("backends", backends),
     ("overlap", overlap),
+    ("serving", serving),
 ]
 
 QUICK_MODULES = [
@@ -57,6 +59,7 @@ QUICK_MODULES = [
     ("backends", backends),
     ("overlap", overlap),
     ("autotune", autotune),
+    ("serving", serving),
 ]
 
 

@@ -26,10 +26,11 @@ from .cblas import (CblasColMajor, CblasLeft, CblasLower, CblasNonUnit,
                     cblas_ssyrk, cblas_strmm, cblas_strsm)
 from .context import (BlasxContext, CallRecord, MatrixHandle,
                       default_context, set_default_context)
-from .futures import BlasFuture
+from .futures import BackpressureError, BlasFuture, SerialExecutor
 
 __all__ = [
     "BlasxContext", "MatrixHandle", "CallRecord", "BlasFuture",
+    "BackpressureError", "SerialExecutor",
     "default_context", "set_default_context",
     "gemm_batched", "gemm_strided_batched",
     "cblas_dgemm", "cblas_dsymm", "cblas_dsyrk", "cblas_dsyr2k",

@@ -37,6 +37,7 @@ Example
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import json
@@ -234,6 +235,11 @@ class BlasxContext:
         self._auto_tune = bool(auto_tune)
         self._tuning_cache = tuning_cache
         self._tuner = None                  # built lazily (repro.tuning)
+        # serving attribution (repro.serve): tenant tag + priority-class
+        # boost the next _run threads into the runtime; set via
+        # request_scope so they cover exactly one request
+        self._tenant: Optional[str] = None
+        self._boost: float = 0.0
 
     # ------------------------------------------------------------ lifecycle
     def __enter__(self) -> "BlasxContext":
@@ -385,7 +391,8 @@ class BlasxContext:
         before = [(d.ledger.tasks, d.ledger.steals, d.alru.hits,
                    d.alru.misses) for d in rt.devices]
         t0 = rt.makespan()
-        rt.run(tasks, mats, out_id)
+        rt.run(tasks, mats, out_id,
+               tenant=self._tenant, priority_boost=self._boost)
         after_comm = rt.total_comm_bytes()
         d_tasks = sum(d.ledger.tasks for d in rt.devices) - \
             sum(b[0] for b in before)
@@ -415,6 +422,37 @@ class BlasxContext:
     @property
     def last_call(self) -> Optional[CallRecord]:
         return self.calls[-1] if self.calls else None
+
+    # ------------------------------------------------------------- serving
+    @contextlib.contextmanager
+    def request_scope(self, tenant: Optional[str] = None,
+                      priority_boost: float = 0.0):
+        """Attribute every routine executed inside the ``with`` body to
+        ``tenant`` (tagging its cached tiles for the per-tenant ALRU
+        quotas) and add ``priority_boost`` to each task's Eq. 3
+        locality priority.  Holds the context lock for the duration —
+        routine execution takes the same (reentrant) lock, so scopes
+        from concurrent threads serialize rather than interleave their
+        attribution.  This is the channel ``repro.serve`` uses per
+        request."""
+        self._check_open()
+        with self._lock:
+            prev = (self._tenant, self._boost)
+            self._tenant = tenant
+            self._boost = float(priority_boost)
+            try:
+                yield self
+            finally:
+                self._tenant, self._boost = prev
+
+    def set_tenant_quota(self, tenant: str,
+                         nbytes: Optional[int]) -> None:
+        """Cap ``tenant``'s resident tile-cache bytes on every device
+        (None removes the cap); see
+        :meth:`repro.core.runtime.BlasxRuntime.set_tenant_quota`."""
+        self._check_open()
+        with self._lock:
+            self.runtime.set_tenant_quota(tenant, nbytes)
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:

@@ -131,3 +131,27 @@ class MesixDirectory:
                 for dev in holders:
                     if not (0 <= dev < self.n_devices):
                         raise RuntimeError(f"bogus device {dev} holds {key}")
+
+    def audit(self, alrus: Sequence) -> None:
+        """Cross-check the directory against the actual caches: every
+        holder entry must correspond to a resident block in that
+        device's ALRU, and every resident block must be registered
+        here.  The quota machinery evicts through the same
+        ``on_evict`` path as capacity pressure, so tenant isolation
+        must leave this bijection intact — the serve tests call this
+        after flood runs."""
+        with self._lock:
+            for key, holders in self._holders.items():
+                for dev in holders:
+                    if not (0 <= dev < len(alrus)):
+                        raise RuntimeError(f"bogus device {dev} holds {key}")
+                    if key not in alrus[dev]:
+                        raise RuntimeError(
+                            f"directory says device {dev} holds {key} "
+                            "but its ALRU has no such block")
+            for dev, alru in enumerate(alrus):
+                for key in alru.keys():
+                    if dev not in self._holders.get(key, ()):
+                        raise RuntimeError(
+                            f"device {dev} caches {key} but the "
+                            "directory does not list it as a holder")

@@ -260,6 +260,14 @@ class BlasxRuntime:
         self.backend = create_backend(cfg.backend)
         self._solver = get_solver()
         self.runs = 0
+        # serving front-end state (repro.serve): which tenant the
+        # in-flight run belongs to (tags ALRU blocks for the quota
+        # machinery) and its priority-class boost (additive Eq. 3
+        # term).  Quotas live here too so reset() can reapply them to
+        # the rebuilt devices.
+        self._tenant: Optional[str] = None
+        self._boost: float = 0.0
+        self._tenant_quotas: Dict[str, int] = {}
         # the discrete-event timing engine only exists where virtual
         # clocks do: sim mode with time_model="events".  Threads mode
         # measures real wall time; "lump" keeps the seed max() model.
@@ -269,9 +277,19 @@ class BlasxRuntime:
 
     # ------------------------------------------------------------- public
     def run(self, tasks: Sequence[Task], matrices: Dict[str, TiledMatrix],
-            out_id: str) -> None:
+            out_id: str, *, tenant: Optional[str] = None,
+            priority_boost: float = 0.0) -> None:
         """Execute all tasks; the output matrix (``matrices[out_id]``) is
-        updated in place tile by tile."""
+        updated in place tile by tile.
+
+        ``tenant`` attributes every tile this run pulls into the ALRU
+        caches to that owner (the serving layer's per-tenant quota
+        machinery keys off the tag); ``priority_boost`` is the
+        request's priority-class term, added to every task's Eq. 3
+        locality priority for the duration of the run (the serving
+        front end maps ``interactive``/``batch`` onto it)."""
+        self._tenant = tenant
+        self._boost = float(priority_boost)
         self.runs += 1
         if not tasks:
             return
@@ -492,10 +510,13 @@ class BlasxRuntime:
         return d.rs.take_top(self.cfg.effective_streams)
 
     def _priority(self, d: DeviceSim, t: Task) -> float:
-        """Eq. 3: +2 per L1-resident input tile, +1 per L2 (peer) tile."""
+        """Eq. 3: +2 per L1-resident input tile, +1 per L2 (peer) tile,
+        plus the in-flight run's priority-class boost (serving front
+        end: interactive requests outrank batch in every reservation
+        station their tasks ever share)."""
         if not self.cfg.use_priority:
             return 0.0
-        p = 0.0
+        p = self._boost
         for ref in t.input_refs():
             if ref.key in d.alru:
                 p += 2.0
@@ -759,7 +780,7 @@ class BlasxRuntime:
             data, secs = self._bypass_read(d, ref, xfers)
             return data, secs
 
-        block = d.alru.translate(key, nbytes)
+        block = d.alru.translate(key, nbytes, owner=self._tenant)
         if block is None:
             # every cached block pinned: degrade to an uncached read
             data, secs = self._bypass_read(d, ref, xfers)
@@ -823,6 +844,18 @@ class BlasxRuntime:
         return materialize(mat.read_tile(key.i, key.j), ref), secs
 
     # ----------------------------------------------------------- sessions
+    def set_tenant_quota(self, tenant: str, nbytes: Optional[int]) -> None:
+        """Cap ``tenant``'s resident ALRU bytes on every device (None
+        removes the cap).  While any quota is configured the caches
+        refuse cross-tenant eviction — a flooding tenant recycles its
+        own blocks instead of another tenant's warm set."""
+        if nbytes is None:
+            self._tenant_quotas.pop(tenant, None)
+        else:
+            self._tenant_quotas[tenant] = int(nbytes)
+        for d in self.devices:
+            d.alru.set_quota(tenant, nbytes)
+
     def reset(self) -> None:
         """Cold restart: drop every cached tile, rebuild the coherence
         directory, zero all ledgers and clocks.  The next ``run`` pays
@@ -832,6 +865,9 @@ class BlasxRuntime:
         self.devices = [DeviceSim(d, self.cfg, self.directory)
                         for d in range(self.cfg.n_devices)]
         self.runs = 0
+        for tenant, nbytes in self._tenant_quotas.items():
+            for d in self.devices:
+                d.alru.set_quota(tenant, nbytes)
         if self._engine is not None:  # fresh timelines and trace
             self._engine = EventEngine(self.cfg)
 
@@ -853,6 +889,7 @@ class BlasxRuntime:
             led = dataclasses.asdict(d.ledger)
             led.update(l1_hits=d.alru.hits, l1_misses=d.alru.misses,
                        evictions=d.alru.evictions,
+                       quota_evictions=d.alru.quota_evictions,
                        cache_used=d.heap.used, clock=d.clock,
                        overlap_efficiency=d.ledger.overlap_efficiency)
             out[f"device{d.id}"] = led

@@ -1,0 +1,111 @@
+"""Per-tenant serving ledger.
+
+The runtime's ledgers count bytes and tasks; the serving layer adds
+the client-visible half — latency and queue-wait percentiles, shed
+load, cancellations — keyed by tenant.  Sample windows are bounded
+(last ``window`` samples per tenant) so a long-lived server's stats
+stay O(1) in memory; counters are lifetime.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+DEFAULT_WINDOW = 4096
+
+
+def percentile(samples: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on no samples."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    rank = max(1, math.ceil(q / 100.0 * len(xs)))
+    return xs[min(rank, len(xs)) - 1]
+
+
+class _TenantLedger:
+    __slots__ = ("latencies", "waits", "completed", "failed",
+                 "rejected", "cancelled")
+
+    def __init__(self, window: int):
+        self.latencies: Deque[float] = deque(maxlen=window)
+        self.waits: Deque[float] = deque(maxlen=window)
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.cancelled = 0
+
+
+class ServerStats:
+    """Thread-safe per-tenant counters + latency/wait percentiles."""
+
+    def __init__(self, window: int = DEFAULT_WINDOW):
+        self._window = window
+        self._lock = threading.Lock()
+        self._tenants: Dict[str, _TenantLedger] = {}
+
+    def _ledger(self, tenant: str) -> _TenantLedger:
+        led = self._tenants.get(tenant)
+        if led is None:
+            led = self._tenants[tenant] = _TenantLedger(self._window)
+        return led
+
+    # ----------------------------------------------------------- recording
+    def record(self, tenant: str, wait_s: float, latency_s: float,
+               ok: bool) -> None:
+        with self._lock:
+            led = self._ledger(tenant)
+            led.waits.append(wait_s)
+            led.latencies.append(latency_s)
+            if ok:
+                led.completed += 1
+            else:
+                led.failed += 1
+
+    def record_rejection(self, tenant: str) -> None:
+        with self._lock:
+            self._ledger(tenant).rejected += 1
+
+    def record_cancelled(self, tenant: str) -> None:
+        with self._lock:
+            self._ledger(tenant).cancelled += 1
+
+    # ------------------------------------------------------------ reporting
+    def tenant_p99(self, tenant: str) -> float:
+        with self._lock:
+            led = self._tenants.get(tenant)
+            return percentile(list(led.latencies), 99.0) if led else 0.0
+
+    def snapshot(self, quota_evictions: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, Dict[str, float]]:
+        """Per-tenant dict: counters plus p50/p99 latency and queue
+        wait in milliseconds.  ``quota_evictions`` (tenant -> count,
+        from the ALRU owner ledgers) is merged in when given."""
+        out: Dict[str, Dict[str, float]] = {}
+        with self._lock:
+            items = [(t, led, list(led.latencies), list(led.waits))
+                     for t, led in self._tenants.items()]
+        for tenant, led, lats, waits in items:
+            out[tenant] = {
+                "completed": led.completed,
+                "failed": led.failed,
+                "rejected": led.rejected,
+                "cancelled": led.cancelled,
+                "latency_p50_ms": percentile(lats, 50.0) * 1e3,
+                "latency_p99_ms": percentile(lats, 99.0) * 1e3,
+                "queue_wait_p50_ms": percentile(waits, 50.0) * 1e3,
+                "queue_wait_p99_ms": percentile(waits, 99.0) * 1e3,
+                "quota_evictions": (quota_evictions or {}).get(tenant, 0),
+            }
+        # quota'd tenants that never completed a request still show up
+        for tenant, n in (quota_evictions or {}).items():
+            if tenant not in out:
+                out[tenant] = {
+                    "completed": 0, "failed": 0, "rejected": 0,
+                    "cancelled": 0, "latency_p50_ms": 0.0,
+                    "latency_p99_ms": 0.0, "queue_wait_p50_ms": 0.0,
+                    "queue_wait_p99_ms": 0.0, "quota_evictions": n,
+                }
+        return out

@@ -3,14 +3,19 @@ tile caches, per-call ledgers, futures, batching), the CBLAS legacy
 layer, and the three-surface equivalence required by the redesign —
 every L3 routine must produce oracle-identical results through the
 legacy blas3 functions, BlasxContext methods, and cblas_* wrappers."""
+import concurrent.futures
+import threading
+import time
+
 import numpy as np
 import pytest
 
-from repro.api import (BlasxContext, CblasColMajor, CblasLower,
-                       CblasNonUnit, CblasNoTrans, CblasRight, CblasRowMajor,
-                       CblasTrans, CblasUnit, CblasUpper, MatrixHandle,
-                       cblas_dgemm, cblas_dsymm, cblas_dsyr2k, cblas_dsyrk,
-                       cblas_dtrmm, cblas_dtrsm)
+from repro.api import (BackpressureError, BlasxContext, CblasColMajor,
+                       CblasLower, CblasNonUnit, CblasNoTrans, CblasRight,
+                       CblasRowMajor, CblasTrans, CblasUnit, CblasUpper,
+                       MatrixHandle, SerialExecutor, cblas_dgemm,
+                       cblas_dsymm, cblas_dsyr2k, cblas_dsyrk, cblas_dtrmm,
+                       cblas_dtrsm)
 from repro.core import (blas3, ref_gemm, ref_symm, ref_syr2k, ref_syrk,
                         ref_trmm, ref_trsm)
 from repro.core.runtime import RuntimeConfig
@@ -367,6 +372,153 @@ def test_submitted_chain_overlaps_in_order():
             np.testing.assert_allclose(o.array(), A @ A, **TOL)
         # later submissions ran warm
         assert ctx.calls[-1].h2d_bytes < ctx.calls[0].h2d_bytes
+
+
+def test_serial_executor_backpressure_bound():
+    """Fails before the max_pending bound existed: the executor
+    accepted unbounded work and never raised."""
+    ex = SerialExecutor(max_pending=1)
+    gate = threading.Event()
+    running = threading.Event()
+    try:
+        f1 = ex.submit(lambda: (running.set(), gate.wait(30)) and 1 or 1)
+        assert running.wait(30)
+        with pytest.raises(BackpressureError, match="max_pending"):
+            ex.submit(lambda: 2)
+        assert ex.pending == 1
+        gate.set()
+        assert f1.result(timeout=30) == 1
+        # slot freed on completion: submitting works again
+        assert ex.submit(lambda: 3).result(timeout=30) == 3
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_serial_executor_blocking_submit_waits_for_slot():
+    ex = SerialExecutor(max_pending=1)
+    gate = threading.Event()
+    try:
+        f1 = ex.submit(lambda: gate.wait(30))
+        threading.Timer(0.05, gate.set).start()
+        f2 = ex.submit(lambda: 42, block=True, block_timeout=30)
+        assert f2.result(timeout=30) == 42
+        assert f1.result(timeout=30)
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_serial_executor_blocking_submit_times_out():
+    ex = SerialExecutor(max_pending=1)
+    gate = threading.Event()
+    try:
+        ex.submit(lambda: gate.wait(30))
+        with pytest.raises(BackpressureError, match="timed out"):
+            ex.submit(lambda: 2, block=True, block_timeout=0.05)
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_serial_executor_unbounded_stays_legacy():
+    ex = SerialExecutor()                   # max_pending=None
+    gate = threading.Event()
+    try:
+        futs = [ex.submit(lambda: gate.wait(30)) for _ in range(20)]
+        gate.set()
+        assert all(f.result(timeout=30) for f in futs)
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_blasfuture_cancel_semantics():
+    """A queued submission cancels; result()/exception() then raise
+    CancelledError; a running submission refuses to cancel."""
+    ex = SerialExecutor()
+    gate = threading.Event()
+    running = threading.Event()
+    try:
+        f1 = ex.submit(lambda: (running.set(), gate.wait(30)) and "ran")
+        assert running.wait(30)
+        f2 = ex.submit(lambda: "never")
+        assert not f1.cancel()              # already running
+        assert f2.cancel()                  # still queued
+        assert f2.cancelled() and f2.done()
+        assert "cancelled" in repr(f2)
+        with pytest.raises(concurrent.futures.CancelledError):
+            f2.result(timeout=1)
+        with pytest.raises(concurrent.futures.CancelledError):
+            f2.exception(timeout=1)
+        gate.set()
+        assert f1.result(timeout=30) == "ran"
+        assert not f1.cancelled()
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_cancelled_submission_frees_backpressure_slot():
+    ex = SerialExecutor(max_pending=2)
+    gate = threading.Event()
+    try:
+        ex.submit(lambda: gate.wait(30))
+        doomed = ex.submit(lambda: None)
+        with pytest.raises(BackpressureError):
+            ex.submit(lambda: None)
+        assert doomed.cancel()
+        f = ex.submit(lambda: "fits")       # cancel freed the slot
+        gate.set()
+        assert f.result(timeout=30) == "fits"
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_ctx_submit_close_race_is_clean():
+    """submit during close raises cleanly, in-flight work completes,
+    and the executor does not leak."""
+    gate = threading.Event()
+    running = threading.Event()
+    ctx = _ctx()
+    f = ctx.submit(lambda: (running.set(), gate.wait(30)) and "done")
+    assert running.wait(30)
+    closer = threading.Thread(target=ctx.close)
+    closer.start()
+    deadline = time.monotonic() + 30
+    while not ctx.closed and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert ctx.closed
+    with pytest.raises(RuntimeError):       # close flagged before drain
+        ctx.submit("gemm", np.eye(8), np.eye(8))
+    gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    assert f.result(timeout=30) == "done"   # in-flight work completed
+    assert ctx._executor is None            # no executor leak
+
+
+def test_ctx_submit_fifo_under_concurrent_submitters():
+    """The single-lane executor preserves each submitter's relative
+    order even when many threads race on submit."""
+    order = []
+    with _ctx() as ctx:
+        def submitter(tid):
+            for i in range(8):
+                ctx.submit(lambda t=tid, k=i: order.append((t, k)))
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        ctx.submit(lambda: None).result(timeout=30)  # drain barrier
+    assert len(order) == 32
+    for tid in range(4):
+        ks = [k for t, k in order if t == tid]
+        assert ks == sorted(ks)             # per-thread FIFO preserved
 
 
 # ================================================================ batched

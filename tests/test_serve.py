@@ -1,0 +1,531 @@
+"""Serving front-end tests: admission queue (bound, priority classes,
+tenant fairness), per-tenant ALRU quotas (the isolation invariant and
+its fails-without-quotas counterpart), tenant/priority threading
+through the runtime, the MESI-X directory audit, and the BlasxServer
+end to end (numerics, affinity, overflow, rejection, cancellation,
+stats, close)."""
+import concurrent.futures
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import BackpressureError, BlasxContext
+from repro.core.alru import Alru
+from repro.core.coherence import MesixDirectory
+from repro.core.heap import BlasxHeap
+from repro.core.runtime import BlasxRuntime, RuntimeConfig
+from repro.core.task import taskize_gemm
+from repro.core.tiling import TiledMatrix, TileKey
+from repro.serve import (BATCH, INTERACTIVE, AdmissionQueue, BlasxServer,
+                         ServeRequest, ServerStats, percentile)
+
+RNG = np.random.default_rng(23)
+
+
+def _req(tenant, priority=BATCH, lane=0):
+    return ServeRequest(tenant=tenant, routine="gemm", args=(), kwargs={},
+                        priority=priority, lane=lane,
+                        future=concurrent.futures.Future())
+
+
+# ========================================================= admission queue
+def test_admission_rejects_bad_priority_class():
+    with pytest.raises(ValueError, match="priority"):
+        _req("a", priority="urgent")
+
+
+def test_admission_depth_bound():
+    q = AdmissionQueue(max_depth=2)
+    assert q.offer(_req("a"))
+    assert q.offer(_req("b"))
+    assert not q.offer(_req("c"))      # at the bound: shed
+    assert q.depth == 2
+    q.take()
+    assert q.offer(_req("c"))          # slot freed
+
+
+def test_admission_interactive_before_batch():
+    q = AdmissionQueue(max_depth=8)
+    first = _req("a", priority=BATCH)
+    second = _req("b", priority=INTERACTIVE)
+    q.offer(first)
+    q.offer(second)
+    # plain FIFO would return `first`; the class split must not
+    assert q.take() is second
+    assert q.take() is first
+
+
+def test_admission_tenant_round_robin_fairness():
+    q = AdmissionQueue(max_depth=16)
+    flood = [_req("flood") for _ in range(4)]
+    polite = [_req("polite") for _ in range(2)]
+    for r in flood[:2]:
+        q.offer(r)
+    for r in polite:
+        q.offer(r)
+    for r in flood[2:]:
+        q.offer(r)
+    order = [q.take().tenant for _ in range(6)]
+    # naive FIFO: flood flood polite polite flood flood — the polite
+    # tenant waits behind the whole flood prefix.  Round-robin
+    # interleaves: each tenant advances one position per turn.
+    assert order == ["flood", "polite", "flood", "polite",
+                     "flood", "flood"]
+
+
+def test_admission_lanes_are_disjoint():
+    q = AdmissionQueue(max_depth=8, n_lanes=2)
+    r0, r1 = _req("a", lane=0), _req("a", lane=1)
+    q.offer(r0)
+    q.offer(r1)
+    assert q.take(1, timeout=0) is r1
+    assert q.take(1, timeout=0) is None
+    assert q.take(0, timeout=0) is r0
+
+
+def test_admission_close_drains_then_returns_none():
+    q = AdmissionQueue(max_depth=8)
+    a, b = _req("a"), _req("b")
+    q.offer(a)
+    q.offer(b)
+    q.close()
+    assert not q.offer(_req("c"))      # closed: refuse new work
+    assert q.take() in (a, b)
+    assert q.take() in (a, b)
+    assert q.take() is None            # drained + closed: immediate
+
+
+def test_admission_drain_empties_lane():
+    q = AdmissionQueue(max_depth=8)
+    reqs = [_req("a") for _ in range(3)]
+    for r in reqs:
+        q.offer(r)
+    assert q.drain(0) == reqs
+    assert q.depth == 0
+
+
+# ====================================================== ALRU tenant quotas
+def _alru(capacity=1000):
+    return Alru(0, BlasxHeap(capacity))
+
+
+def _fill(alru, owner, matrix_id, n, nbytes=100):
+    """Cache n tiles for owner and release them (zero-reader, warm)."""
+    for i in range(n):
+        b = alru.translate(TileKey(matrix_id, i, 0), nbytes, owner=owner)
+        assert b is not None
+        alru.release(b.host_addr)
+
+
+def test_quota_flood_cannot_evict_other_tenants_set():
+    """The serving isolation invariant at the cache level."""
+    alru = _alru(1000)
+    _fill(alru, "a", "WA", 5)               # tenant A's warm 500 bytes
+    alru.set_quota("b", 300)
+    _fill(alru, "b", "XB", 10)              # B floods 1000 bytes of tiles
+    # every one of A's tiles survived; B stayed under its cap by
+    # recycling its own blocks
+    assert all(TileKey("WA", i, 0) in alru for i in range(5))
+    assert alru.owner_bytes("a") == 500
+    assert alru.owner_bytes("b") <= 300
+    assert alru.quota_evictions >= 7
+    assert alru.quota_evictions_by_owner["b"] == alru.quota_evictions
+    alru.check_invariants()
+
+
+def test_without_quotas_flood_evicts_the_other_tenant():
+    """Fails-without-feature counterpart: legacy (no quota) behaviour
+    lets a flood take the whole cache."""
+    alru = _alru(1000)
+    _fill(alru, "a", "WA", 5)
+    _fill(alru, "b", "XB", 10)              # no quota: capacity eviction
+    assert any(TileKey("WA", i, 0) not in alru for i in range(5))
+    assert alru.quota_evictions == 0        # plain evictions, not quota
+    alru.check_invariants()
+
+
+def test_quota_self_eviction_keeps_owner_under_cap():
+    alru = _alru(1000)
+    alru.set_quota("b", 250)
+    _fill(alru, "b", "XB", 4)
+    assert alru.owner_bytes("b") == 200     # 2 evicted to fit 3rd/4th
+    assert TileKey("XB", 3, 0) in alru      # newest survive
+    assert TileKey("XB", 0, 0) not in alru  # LRU victims were its own
+    alru.check_invariants()
+
+
+def test_quota_oversized_request_degrades_without_eviction():
+    alru = _alru(1000)
+    alru.set_quota("b", 50)
+    _fill(alru, "a", "WA", 3)
+    before = alru.keys()
+    assert alru.translate(TileKey("XB", 0, 0), 100, owner="b") is None
+    assert alru.keys() == before            # nothing was touched
+    alru.check_invariants()
+
+
+def test_quota_all_own_blocks_pinned_degrades():
+    alru = _alru(1000)
+    alru.set_quota("b", 200)
+    # two pinned blocks (readers never released) fill the cap
+    assert alru.translate(TileKey("XB", 0, 0), 100, owner="b") is not None
+    assert alru.translate(TileKey("XB", 1, 0), 100, owner="b") is not None
+    assert alru.translate(TileKey("XB", 2, 0), 100, owner="b") is None
+    alru.check_invariants()
+
+
+def test_quota_lowering_cap_trims_immediately():
+    alru = _alru(1000)
+    alru.set_quota("b", 500)
+    _fill(alru, "b", "XB", 5)
+    alru.set_quota("b", 150)
+    assert alru.owner_bytes("b") <= 150
+    assert alru.quota_evictions >= 4
+    alru.check_invariants()
+
+
+def test_quota_untagged_blocks_stay_evictable():
+    """Legacy (owner-less) blocks are fair game even in quota mode —
+    only *tenant* working sets are protected."""
+    alru = _alru(500)
+    _fill(alru, None, "U", 5)               # untagged fills the heap
+    alru.set_quota("b", 300)
+    b = alru.translate(TileKey("XB", 0, 0), 100, owner="b")
+    assert b is not None                    # evicted an untagged block
+    assert len([k for k in alru.keys() if k.matrix_id == "U"]) == 4
+    alru.check_invariants()
+
+
+def test_quota_removed_restores_legacy_eviction():
+    alru = _alru(1000)
+    _fill(alru, "a", "WA", 5)
+    alru.set_quota("b", 300)
+    alru.set_quota("b", None)               # cap removed -> legacy mode
+    _fill(alru, "b", "XB", 10)
+    assert any(TileKey("WA", i, 0) not in alru for i in range(5))
+    alru.check_invariants()
+
+
+def test_quota_invariant_checker_catches_ledger_desync():
+    alru = _alru(1000)
+    _fill(alru, "a", "WA", 2)
+    alru._owner_bytes["a"] = 9999           # corrupt the ledger
+    with pytest.raises(RuntimeError, match="owner byte ledger"):
+        alru.check_invariants()
+
+
+# ======================================== runtime tenant/priority threading
+def _gemm_problem(n=96, tile=32):
+    A = TiledMatrix("A", RNG.standard_normal((n, n)), tile)
+    B = TiledMatrix("B", RNG.standard_normal((n, n)), tile)
+    C = TiledMatrix("C", np.zeros((n, n)), tile)
+    tasks = taskize_gemm(A.grid, B.grid, C.grid, "N", "N", 1.0, 0.0)
+    return tasks, {"A": A, "B": B, "C": C}
+
+
+def test_run_tags_cached_blocks_with_tenant():
+    rt = BlasxRuntime(RuntimeConfig(n_devices=1, mode="sim",
+                                    cache_bytes=8 << 20))
+    tasks, mats = _gemm_problem()
+    rt.run(tasks, mats, "C", tenant="t1")
+    owners = {b.owner for d in rt.devices
+              for b in [d.alru.peek(k) for k in d.alru.keys()]}
+    assert owners == {"t1"}
+    np.testing.assert_allclose(mats["C"].data,
+                               mats["A"].data @ mats["B"].data,
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_priority_boost_is_additive_on_eq3():
+    rt = BlasxRuntime(RuntimeConfig(n_devices=1, mode="sim",
+                                    policy="blasx", cache_bytes=8 << 20))
+    tasks, mats = _gemm_problem()
+    rt.run(tasks, mats, "C", priority_boost=0.0)
+    d, t = rt.devices[0], tasks[0]
+    base = rt._priority(d, t)
+    rt._boost = 2.5
+    assert rt._priority(d, t) == pytest.approx(base + 2.5)
+
+
+def test_run_sets_boost_for_the_duration():
+    rt = BlasxRuntime(RuntimeConfig(n_devices=1, mode="sim",
+                                    cache_bytes=8 << 20))
+    tasks, mats = _gemm_problem(n=64)
+    rt.run(tasks, mats, "C", priority_boost=3.0)
+    assert rt._boost == 3.0
+    rt.run(tasks, mats, "C")                # default run clears it
+    assert rt._boost == 0.0
+
+
+def test_set_tenant_quota_applies_everywhere_and_survives_reset():
+    rt = BlasxRuntime(RuntimeConfig(n_devices=2, mode="sim",
+                                    cache_bytes=8 << 20))
+    rt.set_tenant_quota("t", 1 << 20)
+    assert all(d.alru.quota_of("t") == 1 << 20 for d in rt.devices)
+    rt.reset()                              # rebuilds the devices
+    assert all(d.alru.quota_of("t") == 1 << 20 for d in rt.devices)
+    rt.set_tenant_quota("t", None)
+    assert all(d.alru.quota_of("t") is None for d in rt.devices)
+    assert "quota_evictions" in rt.stats()["device0"]
+
+
+# ======================================================== directory audit
+def test_directory_audit_passes_after_runs():
+    rt = BlasxRuntime(RuntimeConfig(n_devices=2, mode="sim",
+                                    cache_bytes=8 << 20))
+    tasks, mats = _gemm_problem()
+    rt.run(tasks, mats, "C", tenant="t1")
+    rt.directory.audit([d.alru for d in rt.devices])
+
+
+def test_directory_audit_detects_desync_both_ways():
+    directory = MesixDirectory(1, [[0]])
+    alru = Alru(0, BlasxHeap(1000))
+    key = TileKey("A", 0, 0)
+    directory.on_fill(key, 0)               # directory-only: no block
+    with pytest.raises(RuntimeError, match="ALRU has no such block"):
+        directory.audit([alru])
+    directory.on_evict(key, 0)
+    b = alru.translate(key, 100)            # cache-only: no holder entry
+    alru.release(b.host_addr)
+    with pytest.raises(RuntimeError, match="does not list it"):
+        directory.audit([alru])
+
+
+# ============================================================ BlasxServer
+def _server(pool_size=2, **kw):
+    cfg = kw.pop("cfg", RuntimeConfig(n_devices=1, mode="sim",
+                                      cache_bytes=8 << 20))
+    kw.setdefault("tile", 32)
+    return BlasxServer(cfg, pool_size=pool_size, **kw)
+
+
+def test_server_serves_correct_results_to_two_tenants():
+    with _server() as srv:
+        a1, b1 = (RNG.standard_normal((64, 48)),
+                  RNG.standard_normal((48, 80)))
+        a2, b2 = (RNG.standard_normal((96, 64)),
+                  RNG.standard_normal((64, 32)))
+        f1 = srv.submit("t1", "gemm", a1, b1, priority=INTERACTIVE)
+        f2 = srv.submit("t2", "gemm", a2, b2)
+        np.testing.assert_allclose(f1.result(timeout=30).array(),
+                                   a1 @ b1, rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(f2.result(timeout=30).array(),
+                                   a2 @ b2, rtol=1e-10, atol=1e-10)
+        st = srv.stats()
+        assert st["tenants"]["t1"]["completed"] == 1
+        assert st["tenants"]["t2"]["completed"] == 1
+
+
+def test_server_affinity_keeps_tenant_on_one_context():
+    with _server() as srv:
+        seen = set()
+        for _ in range(4):
+            f = srv.submit("sticky", lambda ctx: id(ctx))
+            seen.add(f.result(timeout=30))
+        assert len(seen) == 1
+        lane = srv.context_of("sticky")
+        assert id(srv._contexts[lane]) in seen
+
+
+def test_server_handles_pin_requests_to_their_context():
+    with _server() as srv:
+        w = srv.tile("t1", RNG.standard_normal((64, 64)))
+        home = srv.context_of("t1")
+        x = RNG.standard_normal((48, 64))
+        got = srv.submit("t1", "gemm", x, w).result(timeout=30)
+        np.testing.assert_allclose(got.array(), x @ w.array(),
+                                   rtol=1e-10, atol=1e-10)
+        assert srv.context_of("t1") == home
+        with pytest.raises(ValueError, match="outside this server"):
+            with BlasxContext(RuntimeConfig(n_devices=1, mode="sim")) as o:
+                srv.submit("t1", "gemm", x, o.tile(np.eye(64)))
+
+
+def test_server_overflow_routes_to_least_loaded_context():
+    with _server(overflow_depth=0) as srv:
+        gate = threading.Event()
+        stalled = srv.submit("t", lambda ctx: gate.wait(30))
+        try:
+            home = srv.context_of("t")
+            # home lane is 1 deep, other lane idle -> overflow
+            f = srv.submit("t", lambda ctx: id(ctx))
+            other = 1 - home
+            assert f.result(timeout=30) == id(srv._contexts[other])
+            assert srv.context_of("t") == home   # affinity did not move
+        finally:
+            gate.set()
+        stalled.result(timeout=30)
+
+
+def test_server_without_overflow_queues_behind_home_lane():
+    """Fails-without-feature counterpart for overflow routing: a deep
+    overflow threshold keeps the tenant glued to its (busy) home."""
+    with _server(overflow_depth=100) as srv:
+        gate = threading.Event()
+        stalled = srv.submit("t", lambda ctx: gate.wait(30))
+        home = srv.context_of("t")
+        f = srv.submit("t", lambda ctx: id(ctx))
+        assert not f.done()                  # stuck behind the stall
+        gate.set()
+        assert f.result(timeout=30) == id(srv._contexts[home])
+        stalled.result(timeout=30)
+
+
+def test_server_sheds_load_with_backpressure_error():
+    with _server(pool_size=1, max_depth=2) as srv:
+        gate = threading.Event()
+        running = threading.Event()
+        stalled = srv.submit(
+            "a", lambda ctx: (running.set(), gate.wait(30)) and None)
+        assert running.wait(30)              # worker busy; queue empty
+        q1 = srv.submit("a", lambda ctx: 1)
+        q2 = srv.submit("b", lambda ctx: 2)
+        with pytest.raises(BackpressureError):
+            srv.submit("c", lambda ctx: 3)
+        gate.set()
+        assert (q1.result(timeout=30), q2.result(timeout=30)) == (1, 2)
+        stalled.result(timeout=30)
+        st = srv.stats()["tenants"]
+        assert st["c"]["rejected"] == 1
+        assert st["c"]["completed"] == 0
+
+
+def test_server_cancels_queued_requests():
+    with _server(pool_size=1) as srv:
+        gate = threading.Event()
+        running = threading.Event()
+        stalled = srv.submit(
+            "a", lambda ctx: (running.set(), gate.wait(30)) and None)
+        assert running.wait(30)
+        doomed = srv.submit("a", lambda ctx: 1)
+        assert doomed.cancel()
+        assert doomed.cancelled()
+        with pytest.raises(concurrent.futures.CancelledError):
+            doomed.result(timeout=1)
+        gate.set()
+        stalled.result(timeout=30)
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            if srv.stats()["tenants"].get("a", {}).get("cancelled"):
+                break
+            time.sleep(0.01)
+        assert srv.stats()["tenants"]["a"]["cancelled"] == 1
+
+
+def test_server_quota_isolation_end_to_end():
+    """Acceptance invariant: tenant A's warm set survives tenant B's
+    flood when B is quota'd; the directory stays in sync throughout."""
+    cfg = RuntimeConfig(n_devices=1, mode="sim", cache_bytes=1 << 20)
+    with _server(pool_size=1, cfg=cfg, quotas={"b": 256 << 10}) as srv:
+        x = srv.tile("a", RNG.standard_normal((128, 128)))
+        w = srv.tile("a", RNG.standard_normal((128, 128)))
+        srv.submit("a", "gemm", x, w).result(timeout=30)
+        ctx = srv._contexts[0]
+        resident = {k for d in ctx.runtime.devices
+                    for k in d.alru.keys()
+                    if k.matrix_id in (x.matrix_id, w.matrix_id)}
+        assert resident                      # A's working set is warm
+        big = RNG.standard_normal((256, 256))
+        for _ in range(3):                   # ephemeral flood traffic
+            srv.submit("b", "gemm", big, big).result(timeout=30)
+        for d in ctx.runtime.devices:
+            still = {k for k in d.alru.keys()}
+            d.alru.check_invariants()
+        survivors = {k for d in ctx.runtime.devices
+                     for k in d.alru.keys()
+                     if k.matrix_id in (x.matrix_id, w.matrix_id)}
+        assert survivors == resident         # nothing of A's was evicted
+        ctx.runtime.directory.audit(
+            [d.alru for d in ctx.runtime.devices])
+        assert srv.quota_evictions().get("b", 0) > 0
+        assert srv.stats()["tenants"]["b"]["quota_evictions"] > 0
+
+
+def test_server_flood_evicts_warm_set_without_quota():
+    """Fails-without-feature counterpart: the identical flood with no
+    quota configured does evict tenant A's warm tiles."""
+    cfg = RuntimeConfig(n_devices=1, mode="sim", cache_bytes=1 << 20)
+    with _server(pool_size=1, cfg=cfg) as srv:
+        x = srv.tile("a", RNG.standard_normal((128, 128)))
+        w = srv.tile("a", RNG.standard_normal((128, 128)))
+        srv.submit("a", "gemm", x, w).result(timeout=30)
+        ctx = srv._contexts[0]
+        resident = {k for d in ctx.runtime.devices
+                    for k in d.alru.keys()
+                    if k.matrix_id in (x.matrix_id, w.matrix_id)}
+        big = RNG.standard_normal((256, 256))
+        for _ in range(3):
+            srv.submit("b", "gemm", big, big).result(timeout=30)
+        survivors = {k for d in ctx.runtime.devices
+                     for k in d.alru.keys()
+                     if k.matrix_id in (x.matrix_id, w.matrix_id)}
+        assert survivors < resident          # flood ate into A's set
+
+
+def test_server_stats_shape_and_percentiles():
+    with _server() as srv:
+        for _ in range(3):
+            srv.submit("t", lambda ctx: None).result(timeout=30)
+        row = srv.stats()["tenants"]["t"]
+        for field in ("completed", "failed", "rejected", "cancelled",
+                      "latency_p50_ms", "latency_p99_ms",
+                      "queue_wait_p50_ms", "queue_wait_p99_ms",
+                      "quota_evictions"):
+            assert field in row
+        assert row["completed"] == 3
+        assert row["latency_p99_ms"] >= row["latency_p50_ms"] >= 0.0
+
+
+def test_server_routine_errors_surface_and_count_as_failed():
+    with _server() as srv:
+        def boom(ctx):
+            raise ValueError("kaput")
+        f = srv.submit("t", boom)
+        with pytest.raises(ValueError, match="kaput"):
+            f.result(timeout=30)
+        assert srv.stats()["tenants"]["t"]["failed"] == 1
+
+
+def test_server_close_waits_then_rejects():
+    srv = _server()
+    f = srv.submit("t", lambda ctx: 7)
+    srv.close()
+    assert f.result(timeout=1) == 7          # queued work drained
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit("t", lambda ctx: 8)
+    srv.close()                              # idempotent
+
+
+def test_server_adopted_contexts_survive_close():
+    with BlasxContext(RuntimeConfig(n_devices=1, mode="sim")) as ctx:
+        srv = BlasxServer(contexts=[ctx])
+        srv.submit("t", lambda c: None).result(timeout=30)
+        srv.close()
+        assert not ctx.closed                # owner keeps the context
+        ctx.gemm(np.eye(8), np.eye(8))       # still serviceable
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 99.0) == 0.0
+    assert percentile([5.0], 50.0) == 5.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50.0) == 2.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 99.0) == 4.0
+
+
+def test_server_stats_ledger_direct():
+    st = ServerStats(window=4)
+    st.record("t", wait_s=0.001, latency_s=0.002, ok=True)
+    st.record("t", wait_s=0.002, latency_s=0.004, ok=False)
+    st.record_rejection("t")
+    st.record_cancelled("t")
+    snap = st.snapshot({"t": 3, "ghost": 1})
+    assert snap["t"]["completed"] == 1
+    assert snap["t"]["failed"] == 1
+    assert snap["t"]["rejected"] == 1
+    assert snap["t"]["cancelled"] == 1
+    assert snap["t"]["quota_evictions"] == 3
+    assert snap["ghost"]["quota_evictions"] == 1
+    assert snap["t"]["latency_p50_ms"] == pytest.approx(2.0)
