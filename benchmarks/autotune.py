@@ -18,12 +18,26 @@ A second tuner over the same cache then re-tunes every key and the
 summary row records ``second_pass_sweeps`` — **zero** means every later
 context starts warm (the cache-hit acceptance criterion, also gated).
 
+A second sub-lane (``autotune/longtail``) exercises the learned cost
+model on long-tailed shape traffic: a small training distribution is
+swept into a fresh cache, then an ``auto``-mode tuner resolves 21
+fresh, disjoint shape buckets.  The row records the measured
+shadow-run count against the *analytic* count a ``sweep``-mode tuner
+would have paid on the same distribution (``len(candidates)`` per
+bucket — exact, since a sweep measures every candidate once), and two
+gated flags: ``sweep_reduction_ge_5x`` (auto pays >= 5x fewer shadow
+runs) and ``tuned_le_default_all`` (every adopted config still
+measured tuned <= default — model adoptions are confirmation-verified,
+fallback sweeps hold by construction).  See ``docs/TUNING.md``.
+
 All metrics are virtual-clock deterministic: identical on every host,
 so ``compare.py`` gates them tightly against ``baseline.json``.
 
 When ``BLASX_TUNING_CACHE`` is set (the CI bench-smoke job points it
 at ``TUNING_pr.json``), the tuning cache persists there and is
-uploaded as an artifact alongside ``BENCH_pr.json``.
+uploaded as an artifact alongside ``BENCH_pr.json``.  The longtail
+sub-lane always uses a private memory-only cache (``TuningCache("")``)
+— its training-set contents must be identical under CI and locally.
 """
 from __future__ import annotations
 
@@ -35,6 +49,35 @@ FULL_TILES = (256, 512, 1024, 2048)
 STREAMS = (2, 4)
 POLICIES = ("blasx", "static")
 DTYPES = ("float64", "float32")
+
+# longtail sub-lane candidate space: small tiles (the fresh shapes dip
+# to 256-buckets) and a wider stream axis, so a full sweep costs 18
+# shadow runs per bucket — the cost structure the model collapses to
+# at most 2 confirmation runs
+LT_TILES = (128, 256, 512)
+LT_STREAMS = (2, 4, 8)
+LT_POLICIES = ("blasx", "static")
+# training distribution: cube shapes plus a few aspect-skewed ones
+# (cubes alone leave the model extrapolating on every skewed fresh
+# shape), swept; all buckets disjoint from LT_FRESH
+LT_TRAIN = tuple((r, (s, s, s)) for r in ("gemm", "syrk")
+                 for s in (250, 500, 1000, 2000)) + (
+    ("gemm", (250, 250, 500)), ("gemm", (500, 250, 250)),
+    ("gemm", (1000, 500, 1000)), ("gemm", (500, 1000, 2000)),
+    ("syrk", (1000, 250, 1000)), ("syrk", (2000, 1000, 2000)),
+)
+# fresh long-tail distribution: 21 non-cube shapes whose buckets are
+# all distinct and disjoint from the training cubes
+LT_FRESH = tuple(("gemm", s) for s in (
+    (250, 500, 1000), (250, 1000, 500), (500, 250, 1000),
+    (500, 1000, 250), (1000, 250, 500), (1000, 500, 250),
+    (250, 250, 1000), (1000, 250, 250), (250, 1000, 1000),
+    (1000, 1000, 250), (500, 500, 2000), (2000, 500, 500),
+    (500, 2000, 2000), (2000, 2000, 500),
+)) + tuple(("syrk", (n, k, n)) for n, k in (
+    (250, 1000), (500, 250), (1000, 500), (2000, 250),
+    (250, 2000), (500, 1000), (1000, 2000),
+))
 
 
 def _base_cfg():
@@ -96,7 +139,57 @@ def run(quick: bool = True) -> List[Dict]:
         "cache_path": cache.path or "",
         "fingerprint": tuner.fingerprint,
     })
+    rows.append(_longtail())
     return rows
+
+
+def _longtail() -> Dict:
+    """The learned-cost-model sub-lane (see module docstring)."""
+    from repro.tuning import Autotuner, TuningCache
+    from repro.tuning.autotuner import shape_bucket
+
+    cfg = _base_cfg()
+    lt_kw = dict(tiles=LT_TILES, streams=LT_STREAMS, policies=LT_POLICIES)
+    # memory-only by construction: the CI bench job sets
+    # BLASX_TUNING_CACHE, and loading the main lane's entries here
+    # would change the training set between CI and local runs
+    cache = TuningCache("")
+    trainer = Autotuner(cfg, cache=cache, mode="sweep", **lt_kw)
+    for routine, (m, k, n) in LT_TRAIN:
+        trainer.tune(routine, m, k, n, dtype="float64")
+
+    auto = Autotuner(cfg, cache=cache, mode="auto", **lt_kw)
+    train_buckets = {(r, shape_bucket(*s)) for r, s in LT_TRAIN}
+    fresh_buckets = {(r, shape_bucket(*s)) for r, s in LT_FRESH}
+    assert not (train_buckets & fresh_buckets), \
+        "longtail fresh distribution overlaps the training distribution"
+    # the exact cost a sweep-mode tuner would pay on the fresh
+    # distribution: one shadow run per candidate per bucket
+    sweep_mode_runs = sum(
+        len(auto._candidates(r, shape_bucket(*s))) for r, s in LT_FRESH)
+    ok = True
+    for routine, (m, k, n) in LT_FRESH:
+        best = auto.tune(routine, m, k, n, dtype="float64")
+        ok &= best.makespan <= best.default_makespan * (1 + 1e-9)
+    auto_mode_runs = auto.sweeps
+    reduction = sweep_mode_runs / max(1, auto_mode_runs)
+    rep = auto.report()
+    return {
+        "name": "autotune/longtail",
+        "us_per_call": "",
+        "train_buckets": len(train_buckets),
+        "fresh_buckets": len(fresh_buckets),
+        "sweep_mode_runs": sweep_mode_runs,
+        "auto_mode_runs": auto_mode_runs,
+        "sweep_reduction": f"{reduction:.2f}",
+        "sweep_reduction_ge_5x": int(reduction >= 5.0),
+        "tuned_le_default_all": int(ok),
+        "model_adoptions": rep["model_adoptions"],
+        "model_fallbacks": rep["model_fallbacks"],
+        "confirmations": rep["confirmations"],
+        "model_rows": rep["model"]["n_rows"],
+        "model_rmse": f"{rep['model']['rmse']:.4f}",
+    }
 
 
 def main(argv=None) -> int:

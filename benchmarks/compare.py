@@ -20,7 +20,10 @@ Two classes of checks:
   overlap-off on every policy; blasx COMM fraction <= cublasxt — see
   benchmarks/overlap.py), the runtime-autotuner lane's properties
   hold (tuned makespan <= default on every routine x dtype; the second
-  tuning pass is a pure cache hit — see benchmarks/autotune.py), and
+  tuning pass is a pure cache hit; on the long-tailed fresh shape
+  distribution the learned-cost-model ``auto`` mode pays >= 5x fewer
+  shadow runs than a full sweep while every adopted config is still
+  measured tuned <= default — see benchmarks/autotune.py), and
   the serving lane's flags hold (quota'd tenant isolation + its
   fails-without counterpart, exact admission rejections, interactive
   before batch, loaded-vs-unloaded p99 bound — see
@@ -188,6 +191,30 @@ def check_autotune_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
     else:
         gate.note(f"OK   invariant: second tuning pass swept 0 configs "
                   f"({summary.get('cache_entries')} cached entries)")
+    longtail = pr_rows.get("autotune/longtail")
+    if longtail is None:
+        gate.fail("autotune/longtail row missing from PR report")
+        return
+    if _num(longtail, "tuned_le_default_all") != 1:
+        gate.fail(
+            "invariant: every config the auto-mode tuner adopts on the "
+            "long-tailed fresh distribution must satisfy measured tuned "
+            "makespan <= default")
+    else:
+        gate.note("OK   invariant: longtail tuned <= default on all "
+                  f"{longtail.get('fresh_buckets')} fresh buckets")
+    if _num(longtail, "sweep_reduction_ge_5x") != 1:
+        gate.fail(
+            "invariant: auto mode must pay >= 5x fewer shadow runs than "
+            "sweep mode on the fresh long-tailed distribution "
+            f"(sweep_mode_runs={longtail.get('sweep_mode_runs')}, "
+            f"auto_mode_runs={longtail.get('auto_mode_runs')}, "
+            f"reduction={longtail.get('sweep_reduction')}x)")
+    else:
+        gate.note(f"OK   invariant: longtail sweep reduction "
+                  f"{longtail.get('sweep_reduction')}x >= 5x "
+                  f"({longtail.get('model_adoptions')} model adoptions, "
+                  f"{longtail.get('model_fallbacks')} fallbacks)")
 
 
 def check_serving_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
@@ -303,6 +330,19 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
                              _num(pr, "default_makespan"),
                              _num(base, "default_makespan"),
                              tol, higher_is_better=False)
+    # longtail sub-lane: shadow-run counts are deterministic (virtual
+    # clock + fixed shape distributions), so a shrinking reduction is a
+    # real model/search regression, not noise
+    pr, base = both("autotune/longtail")
+    if pr is not None:
+        gate.check_ratio("autotune/longtail", "sweep_reduction",
+                         _num(pr, "sweep_reduction"),
+                         _num(base, "sweep_reduction"),
+                         tol, higher_is_better=True)
+        gate.check_ratio("autotune/longtail", "auto_mode_runs",
+                         _num(pr, "auto_mode_runs"),
+                         _num(base, "auto_mode_runs"),
+                         tol, higher_is_better=False)
     # serving lane: deterministic tile/eviction/rejection counts (sim
     # mode, fixed seeds); the wall-clock latency row is NOT gated here
     pr, base = both("serving/isolation")

@@ -178,12 +178,18 @@ class BlasxContext:
         Enable the shape-adaptive runtime autotuner
         (``repro.tuning``).  Raw-array calls without an explicit
         ``tile=`` then resolve their tile size per (routine, shape
-        bucket, dtype) from the tuning cache — sweeping candidate
-        ``(tile, n_streams, policy)`` configs through metadata-only
-        shadow runs on the first miss — and, while the context is
-        still cold (no call has executed), the first tuned call may
-        rebuild the runtime with the tuned ``n_streams``/``policy``.
-        Calls on :class:`MatrixHandle` operands keep the handle's tile
+        bucket, dtype) from the tuning cache — resolving cache misses
+        per the tuner *mode* — and, while the context is still cold
+        (no call has executed), the first tuned call may rebuild the
+        runtime with the tuned ``n_streams``/``policy``.  Accepts a
+        bool or a mode string: ``True`` / ``"sweep"`` sweeps every
+        candidate ``(tile, n_streams, policy)`` through metadata-only
+        shadow runs; ``"model"`` predicts makespans with the learned
+        cost model (``repro.tuning.model``) and confirms the predicted
+        winner in a single shadow run; ``"auto"`` uses the model only
+        once it is trained and its uncertainty is tight, sweeping
+        otherwise (see ``docs/TUNING.md``).  Calls on
+        :class:`MatrixHandle` operands keep the handle's tile
         (re-tiling would break the warm-cache contract).  Any call may
         also pass ``tile="auto"`` explicitly — with or without
         ``auto_tune`` — to resolve just the tile size.
@@ -205,7 +211,7 @@ class BlasxContext:
                  tile: int = DEFAULT_TILE,
                  backend: Optional[str] = None,
                  dtype=None,
-                 auto_tune: bool = False,
+                 auto_tune: Union[bool, str] = False,
                  tuning_cache=None):
         if backend is not None:
             if runtime is not None:
@@ -232,7 +238,19 @@ class BlasxContext:
         self._lock = threading.RLock()
         self._executor: Optional[SerialExecutor] = None
         self._closed = False
-        self._auto_tune = bool(auto_tune)
+        # auto_tune accepts a bool (True == "sweep", the pre-model
+        # behaviour) or a mode string; the mode also applies to
+        # explicit tile="auto" calls on an auto_tune=False context
+        if isinstance(auto_tune, str):
+            from ..tuning import MODES
+            if auto_tune not in MODES:
+                raise ValueError(f"auto_tune must be a bool or one of "
+                                 f"{MODES}, got {auto_tune!r}")
+            self._auto_tune = True
+            self._tune_mode = auto_tune
+        else:
+            self._auto_tune = bool(auto_tune)
+            self._tune_mode = "sweep"
         self._tuning_cache = tuning_cache
         self._tuner = None                  # built lazily (repro.tuning)
         # serving attribution (repro.serve): tenant tag + priority-class
@@ -537,6 +555,7 @@ class BlasxContext:
         if self._tuner is None:
             from ..tuning import Autotuner
             self._tuner = Autotuner(self.cfg, cache=self._tuning_cache,
+                                    mode=self._tune_mode,
                                     default_tile=self.tile_size)
         return self._tuner
 
@@ -607,12 +626,20 @@ class BlasxContext:
 
     def tuning_report(self) -> Dict[str, object]:
         """Introspection for the autotuner: fingerprint, sweep/cache
-        counters, candidate spaces, the per-key tuning decisions this
-        context made, and the schedule knobs currently applied."""
+        counters split by provenance (file-cache vs process-cache hits,
+        model adoptions vs sweeps vs fallbacks), candidate spaces, the
+        per-key tuning decisions this context made, and the schedule
+        knobs currently applied."""
         with self._lock:
             if self._tuner is None:
-                return {"enabled": self._auto_tune, "sweeps": 0,
-                        "cache_hits": 0, "cache_entries": 0, "entries": []}
+                return {"enabled": self._auto_tune,
+                        "mode": self._tune_mode,
+                        "sweeps": 0, "bucket_sweeps": 0,
+                        "confirmations": 0,
+                        "cache_hits": 0, "file_cache_hits": 0,
+                        "process_cache_hits": 0,
+                        "model_adoptions": 0, "model_fallbacks": 0,
+                        "cache_entries": 0, "entries": []}
             rep = self._get_tuner().report()
             rep["enabled"] = self._auto_tune
             rep["applied"] = {"tile_default": self.tile_size,

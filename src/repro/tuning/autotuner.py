@@ -11,22 +11,42 @@ loop at runtime:
 
 1. bucket the problem shape (next power of two per dim) so one search
    covers a neighbourhood of shapes;
-2. sweep candidate ``(tile, n_streams, policy)`` configurations through
-   **metadata-only shadow runs** (``execute=False``) on the
-   discrete-event engine (``time_model="events"``) — full
-   scheduling/cache/link behaviour, zero numerics, so a sweep costs
-   milliseconds even at paper scale;
-3. pick the candidate with the best virtual-clock makespan (ties break
-   toward the earlier candidate; the default config is always candidate
-   zero, so the tuned pick can never be worse than the default under
-   the same cost model);
-4. persist the winner in the :class:`~repro.tuning.cache.TuningCache`
+2. resolve the candidate ``(tile, n_streams, policy)`` configuration
+   for the bucket under one of three **modes**:
+
+   * ``"sweep"`` (default) — measure every candidate through
+     **metadata-only shadow runs** (``execute=False``) on the
+     discrete-event engine (``time_model="events"``) — full
+     scheduling/cache/link behaviour, zero numerics, so a sweep costs
+     milliseconds even at paper scale — and pick the argmin
+     virtual-clock makespan (ties break toward the earlier candidate;
+     the default config is always candidate zero, so the tuned pick
+     can never be worse than the default under the same cost model);
+   * ``"model"`` — predict every candidate's makespan with the
+     learned :class:`~repro.tuning.model.CostModel` (ridge regression
+     in log space, trained on the rows earlier sweeps left in the
+     cache) and **confirm** the predicted winner with measured shadow
+     runs of the winner and the default; adopt only when the measured
+     winner is ``<= default`` (so the guarantee stays measured, never
+     predicted), else fall back to a full sweep;
+   * ``"auto"`` — ``"model"`` when the model's residual-based
+     prediction interval is tight (``rmse <= max_model_rmse`` on at
+     least ``min_model_rows`` training rows), ``"sweep"`` otherwise.
+     Cold caches bootstrap through sweeps; once enough evidence has
+     accumulated, unseen buckets cost two confirmation runs instead
+     of a full sweep (the long-tailed-traffic fix — see
+     ``docs/TUNING.md``);
+
+3. persist the winner in the :class:`~repro.tuning.cache.TuningCache`
    keyed by ``topology fingerprint / backend / routine / shape bucket /
    dtype`` — later contexts (and processes, with a file-backed cache)
-   start warm and never re-sweep.
+   start warm and never re-sweep.  Fitted model state persists in the
+   same file.
 
 Everything is virtual-clock deterministic: the same topology and shape
-always produce the same pick, on any host.
+always produce the same pick, on any host (model predictions inherit
+ordinary float arithmetic, but every adopted makespan is a measured,
+deterministic shadow run).
 """
 from __future__ import annotations
 
@@ -40,9 +60,11 @@ from ..core import task as taskmod
 from ..core.dtypes import canonical_dtype
 from ..core.runtime import BlasxRuntime, RuntimeConfig
 from ..core.tiling import ShadowMatrix
+from . import model as modelmod
 from .cache import TuningCache, resolve_cache
 
 ROUTINES = ("gemm", "syrk", "syr2k", "symm", "trmm", "trsm")
+MODES = ("sweep", "model", "auto")
 
 # candidate tile sizes (paper Fig. 10 sweeps 256..4096; 128 covers the
 # small-shape end the paper never ran)
@@ -61,6 +83,13 @@ DEFAULT_POLICY_CANDIDATES = ("blasx", "static")
 # makespan always exists)
 MAX_SHADOW_STEPS = 60_000
 MIN_BUCKET = 64
+
+# model path: only deviate from the default when the predicted win is
+# at least this fraction — a hair-thin predicted improvement is inside
+# the model's noise, and chasing it risks a confirmation-disproof
+# (which costs a full sweep); predicting "the default is fine" costs
+# one confirmation run and adopts trivially
+MIN_PREDICTED_GAIN = 0.03
 
 
 def shape_bucket(m: int, k: int, n: int) -> Tuple[int, int, int]:
@@ -93,7 +122,7 @@ class TunedConfig:
     policy: str
     makespan: float           # winning virtual-clock makespan (seconds)
     default_makespan: float   # the fixed-default config's makespan
-    source: str               # "swept" | "cache"
+    source: str               # "swept" | "model" | "cache" | "cache-file"
     key: str = ""
 
     @property
@@ -152,7 +181,8 @@ def _shadow_tasks(routine: str, bucket: Tuple[int, int, int], tile: int,
 
 
 class Autotuner:
-    """Per-topology configuration search over metadata shadow runs.
+    """Per-topology configuration search over metadata shadow runs,
+    optionally short-circuited by a learned cost model.
 
     Parameters
     ----------
@@ -164,34 +194,69 @@ class Autotuner:
     cache:
         ``None`` (process-shared), a path, or a
         :class:`~repro.tuning.cache.TuningCache`.
+    mode:
+        ``"sweep"`` (exhaustive, the default), ``"model"`` (always
+        trust a trained cost model, confirmation-checked), or
+        ``"auto"`` (model when its uncertainty is tight, sweep
+        otherwise).  See the module docstring.
     tiles / streams / policies:
         Candidate overrides (benchmark lanes restrict these to bound
         sweep cost).
     default_tile:
         The stack-wide fixed default (``repro.api.context.DEFAULT_TILE``
         unless told otherwise).
+    min_model_rows / max_model_rmse:
+        The ``auto``-mode trust gate: the model must have fit at least
+        this many measured rows with a log-residual RMSE at most this
+        wide before its predictions replace a sweep.
     """
 
     def __init__(self, cfg: RuntimeConfig, cache=None, *,
+                 mode: str = "sweep",
                  tiles: Sequence[int] = DEFAULT_TILE_CANDIDATES,
                  streams: Sequence[int] = DEFAULT_STREAM_CANDIDATES,
                  policies: Sequence[str] = DEFAULT_POLICY_CANDIDATES,
-                 default_tile: int = 256):
+                 default_tile: int = 256,
+                 min_model_rows: int = modelmod.MIN_ROWS,
+                 max_model_rmse: float = modelmod.MAX_RMSE):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.cfg = cfg
         self.cache: TuningCache = resolve_cache(cache)
+        self.mode = mode
         self.fingerprint = topology_fingerprint(cfg)
         self.tiles = tuple(tiles)
         self.streams = tuple(streams)
         self.policies = tuple(policies)
         self.default_tile = int(default_tile)
+        self.min_model_rows = int(min_model_rows)
+        self.max_model_rmse = float(max_model_rmse)
         self.sweeps = 0          # shadow runs performed by THIS tuner
-        self.cache_hits = 0
+        self.bucket_sweeps = 0   # full per-bucket sweeps
+        self.confirmations = 0   # model-path confirmation shadow runs
+        self.cache_hits = 0      # total (file + process)
+        self.file_cache_hits = 0
+        self.process_cache_hits = 0
+        self.model_adoptions = 0
+        self.model_fallbacks = 0  # trained model declined or disproved
         self._events: List[dict] = []   # tuning_report raw material
+        self._model: Optional[modelmod.CostModel] = None
+        self._model_version = -1        # cache.version the fit saw
+        # bootstrap from persisted state so a fresh process predicts
+        # before its first in-process sweep (refit on first staleness)
+        state = self.cache.model_state()
+        if state is not None:
+            m = modelmod.CostModel.from_state(state)
+            if m.trained:
+                self._model = m
+                self._model_version = self.cache.version
 
     # ------------------------------------------------------------ search
     def tune(self, routine: str, m: int, k: Optional[int] = None,
              n: Optional[int] = None, dtype="float64") -> TunedConfig:
-        """Return the tuned config for one problem (cache hit or sweep)."""
+        """Return the tuned config for one problem (cache hit, model
+        prediction + confirmation, or full sweep — see the class
+        docstring for the mode semantics)."""
         k = m if k is None else k
         n = m if n is None else n
         bucket = shape_bucket(m, k, n)
@@ -208,17 +273,34 @@ class Autotuner:
             # Treat as a miss and re-sweep (the fresh entry overwrites).
             entry = None
         if entry is not None:
+            origin = self.cache.origin(key) or "process"
             self.cache_hits += 1
+            if origin == "file":
+                self.file_cache_hits += 1
+            else:
+                self.process_cache_hits += 1
+            source = "cache-file" if origin == "file" else "cache"
             best = TunedConfig(tile=entry["tile"],
                                n_streams=entry["n_streams"],
                                policy=entry["policy"],
                                makespan=entry["makespan"],
                                default_makespan=entry["default_makespan"],
-                               source="cache", key=key)
-            self._events.append({"key": key, "source": "cache",
+                               source=source, key=key)
+            self._events.append({"key": key, "source": source,
                                  "swept": 0, **entry})
             return best
         candidates = self._candidates(routine, bucket)
+        if self.mode in ("model", "auto"):
+            best = self._model_tune(routine, bucket, dt_name, key,
+                                    candidates)
+            if best is not None:
+                return best
+        return self._sweep(routine, bucket, dt_name, key, candidates)
+
+    # --------------------------------------------------------- sweep path
+    def _sweep(self, routine: str, bucket: Tuple[int, int, int],
+               dt_name: str, key: str,
+               candidates: List[Tuple[int, int, str]]) -> TunedConfig:
         results = []
         for tile, ns, policy in candidates:
             span = self._shadow_makespan(routine, bucket, tile, dt_name,
@@ -226,19 +308,13 @@ class Autotuner:
             self.sweeps += 1
             results.append({"tile": tile, "n_streams": ns,
                             "policy": policy, "makespan": span})
+        self.bucket_sweeps += 1
         # candidate zero IS the fixed default: the argmin can therefore
         # never be worse than it (the acceptance invariant)
         default_span = results[0]["makespan"]
         best_row = min(results, key=lambda r: r["makespan"])
-        entry = {
-            "routine": routine, "bucket": list(bucket), "dtype": dt_name,
-            "tile": best_row["tile"], "n_streams": best_row["n_streams"],
-            "policy": best_row["policy"],
-            "makespan": best_row["makespan"],
-            "default_makespan": default_span,
-            "candidates": results,
-            "space": self._space(),
-        }
+        entry = self._entry(routine, bucket, dt_name, best_row,
+                            default_span, results)
         self.cache.put(key, entry)
         self._events.append({"key": key, "source": "swept",
                              "swept": len(results), **entry})
@@ -248,6 +324,127 @@ class Autotuner:
                            makespan=best_row["makespan"],
                            default_makespan=default_span,
                            source="swept", key=key)
+
+    # --------------------------------------------------------- model path
+    def _ensure_model(self) -> Optional[modelmod.CostModel]:
+        """The cost model fitted against the cache's current rows
+        (refit whenever the cache version moved); persisted back into
+        the cache so file-backed caches carry their model with them."""
+        if self._model is not None and \
+                self._model_version == self.cache.version:
+            return self._model
+        rows = modelmod.training_rows(self.cache, self.fingerprint,
+                                      self.cfg.backend,
+                                      self.cfg.topology())
+        model = modelmod.CostModel().fit(rows)
+        self._model = model if model.trained else None
+        self._model_version = self.cache.version
+        if model.trained:
+            self.cache.set_model_state(model.state())
+        return self._model
+
+    def _model_tune(self, routine: str, bucket: Tuple[int, int, int],
+                    dt_name: str, key: str,
+                    candidates: List[Tuple[int, int, str]]
+                    ) -> Optional[TunedConfig]:
+        """Predict per-candidate makespans, confirm the predicted
+        winner against the measured default, adopt on success.  Returns
+        ``None`` to fall back to the sweep (cold/untrusted model, or
+        the confirmation disproved the prediction)."""
+        model = self._ensure_model()
+        if model is None:
+            # nothing to learn from yet: bootstrap through a sweep
+            # (whose rows become the training set)
+            self.model_fallbacks += 1
+            self._events.append({"key": key, "source": "model-fallback",
+                                 "reason": "untrained"})
+            return None
+        trusted = (model.n_rows >= self.min_model_rows
+                   and model.rmse <= self.max_model_rmse)
+        if self.mode == "auto" and not trusted:
+            self.model_fallbacks += 1
+            self._events.append({
+                "key": key, "source": "model-fallback",
+                "reason": "untrusted",
+                "model_rmse": model.rmse, "model_rows": model.n_rows})
+            return None
+        topo = self.cfg.topology()
+        preds = [model.predict(modelmod.features(
+            routine, bucket, dt_name, topo, tile, ns, policy))
+            for tile, ns, policy in candidates]
+        win_idx = min(range(len(preds)), key=preds.__getitem__)
+        if preds[win_idx] >= preds[0] * (1 - MIN_PREDICTED_GAIN):
+            win_idx = 0          # predicted win is inside model noise
+        winner, default = candidates[win_idx], candidates[0]
+        # single confirmation run of the predicted winner; the measured
+        # default is the other half of the tuned<=default guarantee
+        # (free when the model already picked the default itself)
+        win_span = self._shadow_makespan(routine, bucket, winner[0],
+                                         dt_name, winner[1], winner[2])
+        self.sweeps += 1
+        self.confirmations += 1
+        if winner == default:
+            default_span = win_span
+            measured = [{"tile": winner[0], "n_streams": winner[1],
+                         "policy": winner[2], "makespan": win_span}]
+        else:
+            default_span = self._shadow_makespan(
+                routine, bucket, default[0], dt_name, default[1],
+                default[2])
+            self.sweeps += 1
+            self.confirmations += 1
+            measured = [
+                {"tile": default[0], "n_streams": default[1],
+                 "policy": default[2], "makespan": default_span},
+                {"tile": winner[0], "n_streams": winner[1],
+                 "policy": winner[2], "makespan": win_span},
+            ]
+        if win_span > default_span * (1 + 1e-12):
+            # prediction disproved by measurement: the guarantee is
+            # measured, so fall back to the full sweep (whose rows also
+            # enrich the training set exactly where the model was wrong)
+            self.model_fallbacks += 1
+            self._events.append({
+                "key": key, "source": "model-fallback",
+                "reason": "confirmation",
+                "predicted_makespan": preds[win_idx],
+                "measured_makespan": win_span,
+                "default_makespan": default_span})
+            return None
+        best_row = {"tile": winner[0], "n_streams": winner[1],
+                    "policy": winner[2], "makespan": win_span}
+        # only MEASURED rows enter "candidates" (the training set);
+        # predictions ride along separately for introspection
+        entry = self._entry(routine, bucket, dt_name, best_row,
+                            default_span, measured)
+        entry["predicted"] = {
+            "winner_makespan": preds[win_idx],
+            "default_makespan": preds[0],
+            "model_rmse": model.rmse, "model_rows": model.n_rows,
+        }
+        self.cache.put(key, entry)
+        self.model_adoptions += 1
+        self._events.append({"key": key, "source": "model",
+                             "swept": len(measured), **entry})
+        return TunedConfig(tile=winner[0], n_streams=winner[1],
+                           policy=winner[2], makespan=win_span,
+                           default_makespan=default_span,
+                           source="model", key=key)
+
+    # ------------------------------------------------------------ helpers
+    def _entry(self, routine: str, bucket: Tuple[int, int, int],
+               dt_name: str, best_row: dict, default_span: float,
+               measured: List[dict]) -> dict:
+        return {
+            "routine": routine, "bucket": list(bucket), "dtype": dt_name,
+            "tile": best_row["tile"], "n_streams": best_row["n_streams"],
+            "policy": best_row["policy"],
+            "makespan": best_row["makespan"],
+            "default_makespan": default_span,
+            "candidates": measured,
+            "space": self._space(),
+            "topology": self.cfg.topology(),
+        }
 
     def _space(self) -> dict:
         """What a cached entry's verdict depends on besides the key:
@@ -315,13 +512,26 @@ class Autotuner:
     # ------------------------------------------------------------- report
     def report(self) -> dict:
         """Introspection surface behind ``ctx.tuning_report()``."""
+        model = self._model
         return {
+            "mode": self.mode,
             "fingerprint": self.fingerprint,
             "backend": self.cfg.backend,
             "cache_path": self.cache.path,
             "cache_entries": len(self.cache),
             "sweeps": self.sweeps,
+            "bucket_sweeps": self.bucket_sweeps,
+            "confirmations": self.confirmations,
             "cache_hits": self.cache_hits,
+            "file_cache_hits": self.file_cache_hits,
+            "process_cache_hits": self.process_cache_hits,
+            "model_adoptions": self.model_adoptions,
+            "model_fallbacks": self.model_fallbacks,
+            "model": ({"trained": True, "n_rows": model.n_rows,
+                       "rmse": model.rmse}
+                      if model is not None and model.trained
+                      else {"trained": False, "n_rows": 0,
+                            "rmse": None}),
             "tile_candidates": list(self.tiles),
             "stream_candidates": list(self.streams),
             "policy_candidates": list(self.policies),

@@ -1,17 +1,23 @@
-"""Persistent tuning cache — the autotuner's memory.
+"""Persistent tuning cache — the autotuner's memory (and, since the
+learned cost model landed, its training set).
 
 One entry per ``(topology fingerprint, backend, routine, shape bucket,
 dtype)`` key, holding the winning ``(tile, n_streams, policy)`` plus
-the shadow-sweep evidence (per-candidate virtual-clock makespans).
-Entries live in process memory and, when a path is configured, in a
-JSON file so the search runs once per machine — every later
-``BlasxContext`` (or process) starts warm and performs **zero**
-shadow-run sweeps for known keys.
+the shadow-run evidence (per-candidate virtual-clock makespans — which
+doubles as the :mod:`repro.tuning.model` training data).  Entries live
+in process memory and, when a path is configured, in a JSON file so
+the search runs once per machine — every later ``BlasxContext`` (or
+process) starts warm and performs **zero** shadow-run sweeps for known
+keys.  The fitted :class:`~repro.tuning.model.CostModel` state
+persists in the same file (``"model"`` key) next to the entries it was
+trained on.
 
 Resolution order for the backing file:
 
 * an explicit ``path=`` (``BlasxContext(tuning_cache="...")``,
-  ``TuningCache("...")``),
+  ``TuningCache("...")``; the empty string ``""`` forces memory-only
+  even when the environment variable is set — benchmark lanes use it
+  to stay deterministic under CI),
 * else the ``BLASX_TUNING_CACHE`` environment variable (the CI bench
   lane sets it to upload the cache as an artifact),
 * else memory-only (no file is ever written).
@@ -19,6 +25,12 @@ Resolution order for the backing file:
 ``shared_cache()`` returns the process-wide instance used by default:
 two contexts with the same topology share it, which is what makes the
 second context a pure cache hit.
+
+Every entry also carries a **provenance** tag — ``"file"`` when it was
+loaded from a backing file, ``"process"`` when it was put by this
+process — surfaced through :meth:`TuningCache.origin` so
+``ctx.tuning_report()`` can split cache hits into file-cache vs
+process-cache hits.
 """
 from __future__ import annotations
 
@@ -36,16 +48,21 @@ class TuningCache:
 
     Entries are plain dicts (JSON-serializable); the autotuner owns
     their shape.  ``hits``/``misses`` count lookups for the
-    ``tuning_report`` surface.
+    ``tuning_report`` surface; ``version`` increments on every
+    mutation so the cost model knows when its training set went stale.
     """
 
     def __init__(self, path: Optional[str] = None):
-        self.path = path if path is not None else \
+        # path="" is an explicit memory-only override (no env fallback)
+        self.path = (path or None) if path is not None else \
             os.environ.get(ENV_CACHE_PATH) or None
         # reentrant: put() holds the lock through save()'s file write so
         # concurrent puts cannot interleave on one tmp file
         self._lock = threading.RLock()
         self._entries: Dict[str, dict] = {}
+        self._origins: Dict[str, str] = {}     # key -> "file" | "process"
+        self._model_state: Optional[dict] = None
+        self.version = 0
         self.hits = 0
         self.misses = 0
         if self.path and os.path.exists(self.path):
@@ -68,6 +85,19 @@ class TuningCache:
             self.hits += 1
             return dict(entry)
 
+    def origin(self, key: str) -> Optional[str]:
+        """``"file"`` if the entry came from a backing file,
+        ``"process"`` if it was put by this process, ``None`` when the
+        key is absent.  Does not touch the hit/miss counters."""
+        with self._lock:
+            return self._origins.get(key)
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Copy of every entry, without touching the hit/miss counters
+        (the cost model iterates this to build its training set)."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
     def put(self, key: str, entry: dict) -> None:
         """Store an entry and persist immediately when file-backed (a
         crash between sweeps then loses at most nothing).  The lock is
@@ -75,14 +105,33 @@ class TuningCache:
         interleaving on one tmp file."""
         with self._lock:
             self._entries[key] = dict(entry)
+            self._origins[key] = "process"
+            self.version += 1
+            if self.path:
+                self.save(self.path)
+
+    # -------------------------------------------------- model persistence
+    def model_state(self) -> Optional[dict]:
+        """The persisted :class:`~repro.tuning.model.CostModel` state
+        (or ``None``); loaded from / saved to the same JSON file as the
+        entries."""
+        with self._lock:
+            return dict(self._model_state) if self._model_state else None
+
+    def set_model_state(self, state: Optional[dict]) -> None:
+        """Attach fitted cost-model state; persisted on the next (or,
+        when file-backed, this) save."""
+        with self._lock:
+            self._model_state = dict(state) if state else None
             if self.path:
                 self.save(self.path)
 
     def load(self, path: str) -> int:
-        """Merge entries from a JSON cache file; returns how many were
-        loaded.  Unknown schemas and unreadable/corrupt files are
-        ignored rather than trusted — a damaged cache degrades to a
-        re-sweep, never to a crash loop at context construction."""
+        """Merge entries (and any persisted model state) from a JSON
+        cache file; returns how many entries were loaded.  Unknown
+        schemas and unreadable/corrupt files are ignored rather than
+        trusted — a damaged cache degrades to a re-sweep, never to a
+        crash loop at context construction."""
         try:
             with open(path) as f:
                 data = json.load(f)
@@ -93,8 +142,14 @@ class TuningCache:
         entries = data.get("entries", {})
         if not isinstance(entries, dict):
             return 0
+        model = data.get("model")
         with self._lock:
             self._entries.update(entries)
+            for key in entries:
+                self._origins[key] = "file"
+            if isinstance(model, dict):
+                self._model_state = model
+            self.version += 1
             return len(entries)
 
     def save(self, path: Optional[str] = None) -> str:
@@ -103,10 +158,11 @@ class TuningCache:
             raise ValueError("TuningCache has no backing path")
         tmp = f"{path}.tmp"
         with self._lock:
+            payload = {"schema": CACHE_SCHEMA, "entries": self._entries}
+            if self._model_state:
+                payload["model"] = self._model_state
             with open(tmp, "w") as f:
-                json.dump({"schema": CACHE_SCHEMA,
-                           "entries": self._entries}, f, indent=2,
-                          sort_keys=True)
+                json.dump(payload, f, indent=2, sort_keys=True)
                 f.write("\n")
             os.replace(tmp, path)
         return path
@@ -114,6 +170,9 @@ class TuningCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._origins.clear()
+            self._model_state = None
+            self.version += 1
             self.hits = 0
             self.misses = 0
 
@@ -142,8 +201,9 @@ def reset_shared_cache() -> None:
 
 
 def resolve_cache(spec) -> TuningCache:
-    """``None`` -> process-shared, ``str`` -> file-backed, instance ->
-    itself (the ``tuning_cache=`` coercion used by the context layer)."""
+    """``None`` -> process-shared, ``str`` -> file-backed (``""`` ->
+    memory-only), instance -> itself (the ``tuning_cache=`` coercion
+    used by the context layer)."""
     if spec is None:
         return shared_cache()
     if isinstance(spec, TuningCache):

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Markdown link checker for README + docs/ (the CI lint-job step).
+
+Checks every ``[text](target)`` link in the given markdown files
+(default: ``README.md`` plus ``docs/*.md`` at the repo root):
+
+* **internal file links** (``docs/TUNING.md``, ``../ROADMAP.md``) —
+  the target must exist relative to the linking file: hard failure;
+* **internal anchors** (``#shape-buckets``, ``TUNING.md#cache-file-
+  layout``) — the target file must contain a heading whose
+  GitHub-style slug matches: hard failure;
+* **external links** (``http(s)://…``) — advisory only: listed, never
+  fetched (CI runners have no business failing on a flaky remote).
+
+Links inside fenced code blocks and inline code spans are ignored.
+Exit status is non-zero iff any hard check failed.
+
+Usage::
+
+    python tools/check_links.py [FILE.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^(```|~~~)")
+CODESPAN_RE = re.compile(r"`[^`]*`")
+# [text](target) — target ends at the first unescaped ')'; images too
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+def strip_code(lines: List[str]) -> List[str]:
+    """Blank out fenced blocks and inline code spans, keep line count."""
+    out: List[str] = []
+    in_fence = False
+    for line in lines:
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else CODESPAN_RE.sub("", line))
+    return out
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    text = CODESPAN_RE.sub(lambda m: m.group(0)[1:-1], heading)
+    # markdown emphasis/links don't survive into the anchor text
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path, cache: Dict[Path, set]) -> set:
+    if path not in cache:
+        slugs: Dict[str, int] = {}
+        found = set()
+        in_fence = False
+        for line in path.read_text(encoding="utf-8").splitlines():
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+            found.add(slug if n == 0 else f"{slug}-{n}")
+        cache[path] = found
+    return cache[path]
+
+
+def check_file(md: Path, anchor_cache: Dict[Path, set]
+               ) -> Tuple[List[str], List[str]]:
+    """Return (hard_failures, external_links) for one markdown file."""
+    failures: List[str] = []
+    external: List[str] = []
+    lines = strip_code(md.read_text(encoding="utf-8").splitlines())
+    for lineno, line in enumerate(lines, 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            where = f"{_rel(md)}:{lineno}"
+            if target.startswith(("http://", "https://")):
+                external.append(f"{where}: {target}")
+                continue
+            if target.startswith("mailto:"):
+                continue
+            path_part, _, frag = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    failures.append(f"{where}: broken link -> {target}"
+                                    f" (no such file {path_part})")
+                    continue
+            else:
+                dest = md
+            if frag:
+                if dest.suffix.lower() not in (".md", ".markdown"):
+                    continue
+                if frag.lower() not in anchors_of(dest, anchor_cache):
+                    failures.append(f"{where}: broken anchor -> {target}"
+                                    f" (no heading slugs to '{frag}' in "
+                                    f"{_rel(dest)})")
+    return failures, external
+
+
+def default_files() -> List[Path]:
+    files = [REPO_ROOT / "README.md"]
+    files += sorted((REPO_ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    files = [Path(a).resolve() for a in args] if args else default_files()
+    anchor_cache: Dict[Path, set] = {}
+    all_failures: List[str] = []
+    n_external = 0
+    for md in files:
+        if not md.exists():
+            all_failures.append(f"{md}: file does not exist")
+            continue
+        failures, external = check_file(md, anchor_cache)
+        all_failures += failures
+        n_external += len(external)
+        for ext in external:
+            print(f"advisory: external link (not fetched): {ext}")
+    for f in all_failures:
+        print(f"FAIL: {f}")
+    print(f"check_links: {len(files)} files, {n_external} external links "
+          f"(advisory), {len(all_failures)} hard failures")
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
