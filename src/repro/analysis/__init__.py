@@ -1,0 +1,30 @@
+"""blasxcheck: lock-discipline, lock-order, determinism and
+assertion-strength analyses for the BLASX repro tree, plus the runtime
+lock-witness.
+
+Static side (stdlib ``ast`` only — the CI lint job runs it without
+installing the package):
+
+* :func:`repro.analysis.locks.check_lock_discipline` — LD001/LD002/
+  LD003 against the ``_GUARDED_BY`` declarations;
+* :func:`repro.analysis.locks.check_lock_order` — LO001 cycles in the
+  cross-module acquisition graph;
+* :func:`repro.analysis.determinism.check_determinism` — DT001/DT002
+  wall-clock / ambient-RNG leaks into virtual-clock paths;
+* :func:`repro.analysis.assertions.check_assertions` — AS001/AS002
+  tautological invariant checks.
+
+Dynamic side: :class:`repro.analysis.witness.LockWitness` wraps
+repro-allocated locks during threads-mode tests and reports lock-order
+inversions with both acquisition stacks
+(``-p repro.analysis.pytest_witness`` runs a whole pytest session
+under it).
+
+CLI: ``python -m repro.analysis --strict src`` — see docs/ANALYSIS.md.
+"""
+from .cli import main, run_analyses
+from .findings import Baseline, Finding, RULES
+from .witness import LockWitness
+
+__all__ = ["main", "run_analyses", "Baseline", "Finding", "RULES",
+           "LockWitness"]

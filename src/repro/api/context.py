@@ -206,6 +206,16 @@ class BlasxContext:
     well-ordered.
     """
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # _lock is reentrant, so the routine wrappers may take it around
+    # the lock-held helpers.  runtime/cfg/tile_size/dtype/_auto_tune/
+    # _tune_mode/_tuning_cache/_owns_runtime are fixed after __init__
+    # and stay unlisted.
+    _GUARDED_BY = {"_lock": (
+        "_closed", "_executor", "calls", "n_calls", "_tenant",
+        "_boost", "_tuner")}
+    _LOCK_HELD = ("_run", "_get_tuner", "_maybe_adopt_schedule")
+
     def __init__(self, config: Optional[RuntimeConfig] = None, *,
                  runtime: Optional[BlasxRuntime] = None,
                  tile: int = DEFAULT_TILE,
@@ -288,10 +298,16 @@ class BlasxContext:
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        # _closed flips under _lock in close(); an unlocked read races
+        # with a closing thread (LD001).  The RLock makes this safe to
+        # take even from code already holding it.
+        with self._lock:
+            return self._closed
 
     def _check_open(self) -> None:
-        if self._closed:
+        with self._lock:
+            closed = self._closed
+        if closed:
             raise RuntimeError("BlasxContext is closed")
 
     def _resolve_dtype(self, dtype) -> Optional[np.dtype]:
@@ -439,7 +455,9 @@ class BlasxContext:
 
     @property
     def last_call(self) -> Optional[CallRecord]:
-        return self.calls[-1] if self.calls else None
+        # calls is mutated under _lock by _run; lock the read too
+        with self._lock:
+            return self.calls[-1] if self.calls else None
 
     # ------------------------------------------------------------- serving
     @contextlib.contextmanager
@@ -477,8 +495,10 @@ class BlasxContext:
         """Cumulative session counters: total comm bytes, per-device
         ledgers, call count, modeled makespan."""
         rt = self.runtime
+        with self._lock:
+            n_calls = self.n_calls
         return {
-            "calls": self.n_calls,
+            "calls": n_calls,
             "backend": rt.cfg.backend,
             "comm_bytes": rt.total_comm_bytes(),
             "makespan": rt.makespan(),

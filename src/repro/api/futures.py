@@ -88,6 +88,14 @@ class SerialExecutor:
     ``max_pending=None`` keeps the historical unbounded behaviour.
     """
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # _slot_free wraps _lock.  The PR 6 deadlock was exactly
+    # add_done_callback under _lock — LD002 now forbids it here, and
+    # tests/test_analysis.py keeps the fixed shape as a permanent
+    # negative case.
+    _GUARDED_BY = {"_lock": ("_open", "_pending")}
+    _LOCK_ALIASES = {"_slot_free": "_lock"}
+
     def __init__(self, name: str = "blasx",
                  max_pending: Optional[int] = None):
         if max_pending is not None and max_pending < 1:

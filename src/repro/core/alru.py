@@ -57,6 +57,20 @@ class LRUBlock:
 
 
 class Alru:
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # every field below may only be touched under _lock; the listed
+    # helpers are only ever called with _lock already held; on_evict
+    # is a user callback (never to be invoked under the lock without a
+    # baseline justification).
+    _GUARDED_BY = {"_lock": (
+        "_map", "_front", "_back", "hits", "misses", "evictions",
+        "lifetime_hits", "lifetime_misses", "lifetime_evictions",
+        "_quota", "_owner_bytes", "quota_evictions",
+        "quota_evictions_by_owner")}
+    _LOCK_HELD = ("_dequeue", "_enqueue", "_push_front", "_unlink",
+                  "_may_evict", "_drop_owner_bytes")
+    _CALLBACKS = ("on_evict",)
+
     def __init__(self, device_id: int, heap: BlasxHeap):
         self.device_id = device_id
         self.heap = heap

@@ -28,6 +28,12 @@ STATE_M = "M"  # ephemeral; never observable at rest
 
 
 class MesixDirectory:
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md).
+    # _group_of is immutable after __init__ and deliberately unlisted.
+    _GUARDED_BY = {"_lock": (
+        "_holders", "_served", "_serve_tick", "writebacks",
+        "invalidations")}
+
     def __init__(self, n_devices: int, p2p_groups: Sequence[Sequence[int]]):
         """``p2p_groups`` — lists of device ids sharing a PCI-E switch /
         ICI neighborhood; L2 hits are only served within a group."""
@@ -139,19 +145,30 @@ class MesixDirectory:
         here.  The quota machinery evicts through the same
         ``on_evict`` path as capacity pressure, so tenant isolation
         must leave this bijection intact — the serve tests call this
-        after flood runs."""
+        after flood runs.
+
+        The ALRU queries run *outside* the directory lock, against a
+        snapshot of the holder map: ALRU eviction fires ``on_evict``
+        (which takes this lock) while holding the cache lock, so
+        querying the caches with ``_lock`` held would take the two
+        locks in the opposite order — the Alru<->MesixDirectory
+        inversion LO001 forbids.  Callers run this under quiescence
+        anyway (the bijection is only meaningful with no in-flight
+        evictions), so the snapshot loses nothing."""
         with self._lock:
-            for key, holders in self._holders.items():
-                for dev in holders:
-                    if not (0 <= dev < len(alrus)):
-                        raise RuntimeError(f"bogus device {dev} holds {key}")
-                    if key not in alrus[dev]:
-                        raise RuntimeError(
-                            f"directory says device {dev} holds {key} "
-                            "but its ALRU has no such block")
-            for dev, alru in enumerate(alrus):
-                for key in alru.keys():
-                    if dev not in self._holders.get(key, ()):
-                        raise RuntimeError(
-                            f"device {dev} caches {key} but the "
-                            "directory does not list it as a holder")
+            snapshot = {key: sorted(holders)
+                        for key, holders in self._holders.items()}
+        for key, holders in snapshot.items():
+            for dev in holders:
+                if not (0 <= dev < len(alrus)):
+                    raise RuntimeError(f"bogus device {dev} holds {key}")
+                if key not in alrus[dev]:
+                    raise RuntimeError(
+                        f"directory says device {dev} holds {key} "
+                        "but its ALRU has no such block")
+        for dev, alru in enumerate(alrus):
+            for key in alru.keys():
+                if dev not in snapshot.get(key, ()):
+                    raise RuntimeError(
+                        f"device {dev} caches {key} but the "
+                        "directory does not list it as a holder")

@@ -20,6 +20,13 @@ from .task import Task
 
 
 class ReadyQueue:
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # _cv wraps _lock, so `with self._cv` counts as holding _lock.
+    _GUARDED_BY = {"_lock": (
+        "_tasks", "_ready", "_pending_deps", "_dependents",
+        "_outstanding")}
+    _LOCK_ALIASES = {"_cv": "_lock"}
+
     def __init__(self, tasks: Sequence[Task]):
         self._tasks: Dict[int, Task] = {t.task_id: t for t in tasks}
         self._lock = threading.Lock()
@@ -105,6 +112,9 @@ class ReadyQueue:
 class ReservationStation:
     """Per-device task buffer (paper Fig. 4).  Each slot carries
     (priority, task); work stealing and priority scheduling act on it."""
+
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md)
+    _GUARDED_BY = {"_lock": ("_slots", "_prio")}
 
     def __init__(self, device_id: int, n_slots: int):
         self.device_id = device_id

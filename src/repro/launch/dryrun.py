@@ -102,7 +102,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     rules = rules_for_mesh(mesh)
     chips = n_chips(mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     # 1) the DEPLOYABLE program: full depth, layer scan.  This is the
     #    compile-success proof and the memory_analysis source.
@@ -118,7 +118,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "arch": arch, "shape": shape_name,
             "mesh": "multi" if multi_pod else "single",
             "status": "ok", "chips": chips,
-            "compile_s": time.time() - t0,
+            "compile_s": time.perf_counter() - t0,
             "memory": {k: _mem_attr(mem, k) for k in (
                 "temp_size_in_bytes", "argument_size_in_bytes",
                 "output_size_in_bytes")},
@@ -171,7 +171,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
         "status": "ok", "chips": chips,
-        "compile_s": time.time() - t0,
+        "compile_s": time.perf_counter() - t0,
         "memory": {k: _mem_attr(mem, k) for k in (
             "temp_size_in_bytes", "argument_size_in_bytes",
             "output_size_in_bytes", "alias_size_in_bytes",

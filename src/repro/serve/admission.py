@@ -50,6 +50,11 @@ class ServeRequest:
 class AdmissionQueue:
     """Bounded, laned, priority-classed, tenant-fair request queue."""
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # _nonempty wraps _lock; _pop_locked's suffix marks it lock-held.
+    _GUARDED_BY = {"_lock": ("_closed", "_depth", "_lanes")}
+    _LOCK_ALIASES = {"_nonempty": "_lock"}
+
     def __init__(self, max_depth: int = 64, n_lanes: int = 1):
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")

@@ -74,6 +74,13 @@ class BlasxServer:
         batch=+0).
     """
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # _contexts/_queue/_stats/_boosts/_workers are immutable references
+    # after __init__ (their own locks guard their insides) and stay
+    # unlisted; the *_locked helpers run with _lock already held.
+    _GUARDED_BY = {"_lock": (
+        "_affinity", "_lane_load", "_lane_tenants", "_closed")}
+
     def __init__(self, config: Optional[RuntimeConfig] = None, *,
                  contexts: Optional[Sequence[BlasxContext]] = None,
                  pool_size: int = 2,
@@ -154,7 +161,10 @@ class BlasxServer:
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        # _closed is written under _lock by close(); reading it bare
+        # is a data race the lock-discipline lint (LD001) rejects
+        with self._lock:
+            return self._closed
 
     @property
     def pool_size(self) -> int:
@@ -327,5 +337,7 @@ class BlasxServer:
 
     # ------------------------------------------------------------- helpers
     def _check_open(self) -> None:
-        if self._closed:
+        with self._lock:
+            closed = self._closed
+        if closed:
             raise RuntimeError("BlasxServer is closed")

@@ -41,6 +41,10 @@ class _TenantLedger:
 class ServerStats:
     """Thread-safe per-tenant counters + latency/wait percentiles."""
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md)
+    _GUARDED_BY = {"_lock": ("_tenants",)}
+    _LOCK_HELD = ("_ledger",)
+
     def __init__(self, window: int = DEFAULT_WINDOW):
         self._window = window
         self._lock = threading.Lock()

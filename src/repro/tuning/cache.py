@@ -52,6 +52,14 @@ class TuningCache:
     mutation so the cost model knows when its training set went stale.
     """
 
+    # lock-discipline declarations (repro.analysis, docs/ANALYSIS.md):
+    # put() holds _lock through save()'s file write by design (see
+    # __init__), so save/load are listed as guarded mutators, not
+    # exempted.
+    _GUARDED_BY = {"_lock": (
+        "_entries", "_origins", "_model_state", "version", "hits",
+        "misses")}
+
     def __init__(self, path: Optional[str] = None):
         # path="" is an explicit memory-only override (no env fallback)
         self.path = (path or None) if path is not None else \

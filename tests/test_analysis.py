@@ -1,0 +1,571 @@
+"""blasxcheck static analyses (repro.analysis): each rule family has
+a fails-before fixture reintroducing a shipped bug shape (PR 5 heap
+tautology, PR 6 inline-callback deadlock, the serve_lock race, the
+audit lock-order cycle), plus the real-tree gate: ``--strict src``
+must be clean against the committed baseline.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, Baseline, run_analyses
+from repro.analysis import assertions as as_mod
+from repro.analysis import determinism as dt_mod
+from repro.analysis import locks as ld_mod
+from repro.analysis.findings import Finding, normalize_path, split_findings
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def ld(src, relpath="repro/core/fixture.py"):
+    return ld_mod.analyze_source(textwrap.dedent(src), relpath)
+
+
+# ---------------------------------------------------------------------------
+# rule catalog
+# ---------------------------------------------------------------------------
+
+def test_rule_catalog():
+    assert set(RULES) == {"LD001", "LD002", "LD003", "LO001",
+                          "DT001", "DT002", "AS001", "AS002"}
+
+
+# ---------------------------------------------------------------------------
+# LD001: guarded-field access without the lock (the serve_lock race
+# class: a counter written bare that another thread also writes)
+# ---------------------------------------------------------------------------
+
+BAD_LD001 = """
+    import threading
+
+    class Ledger:
+        _GUARDED_BY = {"_lock": ("served", "_depth")}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.served = 0
+            self._depth = 0
+
+        def record(self, secs):
+            self.served += secs      # racing += outside the lock
+
+        def depth(self):
+            with self._lock:
+                return self._depth
+"""
+
+
+def test_ld001_detects_unguarded_access():
+    findings = ld(BAD_LD001)
+    assert [f.rule for f in findings] == ["LD001"]
+    f = findings[0]
+    assert f.qualname == "Ledger.record"
+    assert f.detail == "served"
+    assert f.key == "repro/core/fixture.py::Ledger.record::served"
+
+
+def test_ld001_clean_when_locked():
+    fixed = BAD_LD001.replace(
+        "self.served += secs      # racing += outside the lock",
+        "with self._lock:\n                self.served += secs")
+    assert ld(fixed) == []
+
+
+def test_ld001_init_exempt_and_locked_suffix_exempt():
+    src = """
+    import threading
+
+    class Box:
+        _GUARDED_BY = {"_lock": ("items",)}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = []
+
+        def _append_locked(self, x):
+            self.items.append(x)
+
+        def append(self, x):
+            with self._lock:
+                self._append_locked(x)
+    """
+    assert ld(src) == []
+
+
+def test_ld001_condition_alias_counts_as_lock():
+    src = """
+    import threading
+
+    class Q:
+        _GUARDED_BY = {"_lock": ("_items",)}
+        _LOCK_ALIASES = {"_cv": "_lock"}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._cv = threading.Condition(self._lock)
+            self._items = []
+
+        def put(self, x):
+            with self._cv:
+                self._items.append(x)
+                self._cv.notify()
+    """
+    assert ld(src) == []
+
+
+# ---------------------------------------------------------------------------
+# LD002: blocking under a held lock — the PR 6 deadlock, re-seeded
+# ---------------------------------------------------------------------------
+
+PR6_DEADLOCK = """
+    import threading
+
+    class SerialExecutor:
+        _GUARDED_BY = {"_lock": ("_open", "_pending")}
+        _LOCK_ALIASES = {"_slot_free": "_lock"}
+
+        def __init__(self, pool):
+            self._pool = pool
+            self._lock = threading.Lock()
+            self._slot_free = threading.Condition(self._lock)
+            self._open = True
+            self._pending = 0
+
+        def _on_done(self, fut):
+            with self._lock:
+                self._pending -= 1
+                self._slot_free.notify()
+
+        def submit(self, fn):
+            with self._lock:
+                self._pending += 1
+                fut = self._pool.submit(fn)
+                fut.add_done_callback(self._on_done)   # PR 6 bug
+            return fut
+"""
+
+
+def test_ld002_detects_pr6_inline_callback_deadlock():
+    findings = [f for f in ld(PR6_DEADLOCK, "repro/api/fixture.py")
+                if f.rule == "LD002"]
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.qualname == "SerialExecutor.submit"
+    assert f.detail == "add_done_callback"
+
+
+def test_real_serial_executor_keeps_callback_outside_lock():
+    """Satellite: the PR 6 fix is now a lint-enforced negative case —
+    the shipped SerialExecutor must stay LD002-clean, while the
+    reintroduced shape (fixture above) is caught."""
+    text = (SRC / "repro/api/futures.py").read_text(encoding="utf-8")
+    findings = ld_mod.analyze_source(text, "repro/api/futures.py")
+    bad = [f for f in findings if f.rule == "LD002"]
+    assert bad == [], [f.render() for f in bad]
+
+
+def test_ld002_user_callback_and_sleep_and_result():
+    src = """
+    import threading, time
+
+    class Cache:
+        _GUARDED_BY = {"_lock": ("_map",)}
+        _CALLBACKS = ("on_evict",)
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._map = {}
+            self.on_evict = None
+
+        def evict(self, k):
+            with self._lock:
+                del self._map[k]
+                self.on_evict(k)
+
+        def flush(self, fut):
+            with self._lock:
+                time.sleep(0.1)
+                fut.result()
+    """
+    details = sorted(f.detail for f in ld(src) if f.rule == "LD002")
+    assert details == ["on_evict", "result", "time.sleep"]
+
+
+def test_ld002_wait_on_own_condition_ok_foreign_wait_flagged():
+    src = """
+    import threading
+
+    class Q:
+        _GUARDED_BY = {"_lock": ("_n",)}
+        _LOCK_ALIASES = {"_cv": "_lock"}
+
+        def __init__(self, other):
+            self._lock = threading.Lock()
+            self._cv = threading.Condition(self._lock)
+            self._other = other
+            self._n = 0
+
+        def take(self):
+            with self._cv:
+                while self._n == 0:
+                    self._cv.wait()      # fine: releases _lock
+                self._n -= 1
+
+        def bad(self):
+            with self._lock:
+                self._other.wait()       # blocks with _lock held
+    """
+    flagged = [f for f in ld(src) if f.rule == "LD002"]
+    assert [f.qualname for f in flagged] == ["Q.bad"]
+
+
+def test_ld002_string_join_not_flagged():
+    src = """
+    import threading
+
+    class R:
+        _GUARDED_BY = {"_lock": ("names",)}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.names = []
+
+        def render(self):
+            with self._lock:
+                return ", ".join(self.names)
+    """
+    assert ld(src) == []
+
+
+def test_ld002_yield_under_lock():
+    src = """
+    import threading
+
+    class Scope:
+        _GUARDED_BY = {"_lock": ("depth",)}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.depth = 0
+
+        def scope(self):
+            with self._lock:
+                self.depth += 1
+                yield self
+                self.depth -= 1
+    """
+    flagged = [f for f in ld(src) if f.rule == "LD002"]
+    assert [f.detail for f in flagged] == ["yield"]
+
+
+# ---------------------------------------------------------------------------
+# LD003: undeclared locks
+# ---------------------------------------------------------------------------
+
+def test_ld003_undeclared_lock():
+    src = """
+    import threading
+
+    class Quiet:
+        def __init__(self):
+            self.serve_lock = threading.Lock()
+    """
+    findings = ld(src)
+    assert _rules(findings) == ["LD003"]
+    assert findings[0].detail == "serve_lock"
+
+
+def test_ld003_silent_for_declared_class():
+    src = """
+    import threading
+
+    class Loud:
+        _GUARDED_BY = {"_lock": ("x",)}
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.x = 0
+    """
+    assert ld(src) == []
+
+
+# ---------------------------------------------------------------------------
+# LO001: lock-order cycles — the audit shape (pre-fix
+# MesixDirectory.audit querying ALRUs under its own lock while ALRU
+# eviction calls back into the directory under the cache lock)
+# ---------------------------------------------------------------------------
+
+AUDIT_CYCLE = """
+    import threading
+
+    class Cache:
+        _GUARDED_BY = {"_lock": ("_map",)}
+        _LOCK_HELD = ("_dequeue",)
+        _CALLBACKS = ("on_evict",)
+
+        def __init__(self):
+            self._lock = threading.RLock()
+            self._map = {}
+            self.on_evict = None
+
+        def _dequeue(self, k):
+            del self._map[k]
+            self.on_evict(k)           # cache lock -> directory lock
+
+        def __contains__(self, k):
+            with self._lock:
+                return k in self._map
+
+    class Directory:
+        _GUARDED_BY = {"_lock": ("_holders",)}
+
+        def __init__(self):
+            self._lock = threading.RLock()
+            self._holders = {}
+
+        def on_evict(self, k):
+            with self._lock:
+                self._holders.pop(k, None)
+
+        def audit(self, caches):
+            with self._lock:
+                for k in self._holders:
+                    if k not in caches[0]:   # directory lock -> cache lock
+                        raise RuntimeError(k)
+"""
+
+
+def test_lo001_detects_audit_cycle():
+    findings = [f for f in ld(AUDIT_CYCLE) if f.rule == "LO001"]
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.detail == "cycle:Cache<->Directory"
+    assert "on_evict" in f.message and "__contains__" in f.message
+
+
+def test_lo001_clean_after_snapshot_fix():
+    fixed = AUDIT_CYCLE.replace(
+        """\
+        def audit(self, caches):
+            with self._lock:
+                for k in self._holders:
+                    if k not in caches[0]:   # directory lock -> cache lock
+                        raise RuntimeError(k)
+""",
+        """\
+        def audit(self, caches):
+            with self._lock:
+                snap = list(self._holders)
+            for k in snap:
+                if k not in caches[0]:
+                    raise RuntimeError(k)
+""")
+    assert fixed != AUDIT_CYCLE
+    assert [f for f in ld(fixed) if f.rule == "LO001"] == []
+
+
+def test_lo001_real_coherence_alru_pair_is_acyclic():
+    """The shipped audit takes a snapshot under the lock and queries
+    the ALRUs outside it — the real pair must stay cycle-free."""
+    import ast
+    mods = []
+    for rel in ("repro/core/alru.py", "repro/core/coherence.py"):
+        mods.append((ast.parse((SRC / rel).read_text(encoding="utf-8")),
+                     rel))
+    assert ld_mod.check_lock_order(mods) == []
+
+
+# ---------------------------------------------------------------------------
+# DT001/DT002: determinism in virtual-clock paths
+# ---------------------------------------------------------------------------
+
+def test_dt001_wall_clock_in_core():
+    src = textwrap.dedent("""
+    import time
+
+    def span():
+        t0 = time.perf_counter()
+        return time.time() - t0
+    """)
+    findings = dt_mod.analyze_source(src, "repro/core/fake_events.py")
+    assert _rules(findings) == ["DT001", "DT001"]
+    assert sorted(f.detail for f in findings) == \
+        ["time.perf_counter", "time.time"]
+
+
+def test_dt001_clock_reference_without_call_detected():
+    src = "import time\nCLOCK = time.perf_counter\n"
+    findings = dt_mod.analyze_source(src, "repro/tuning/fake.py")
+    assert _rules(findings) == ["DT001"]
+    assert findings[0].qualname == "<module>"
+
+
+def test_dt001_out_of_scope_paths_exempt():
+    src = "import time\n\ndef t():\n    return time.time()\n"
+    assert dt_mod.analyze_source(src, "repro/launch/fake.py") == []
+    assert dt_mod.analyze_source(src, "repro/serve/fake.py") == []
+
+
+def test_dt002_ambient_rng_flagged_seeded_generator_ok():
+    src = textwrap.dedent("""
+    import random
+    import numpy as np
+
+    def jitter():
+        rng = np.random.default_rng(0)   # fine: explicit seed
+        return random.random() + np.random.rand()
+    """)
+    findings = dt_mod.analyze_source(src, "repro/tuning/fake.py")
+    assert _rules(findings) == ["DT002", "DT002"]
+    assert sorted(f.detail for f in findings) == \
+        ["np.random.rand", "random.random"]
+
+
+# ---------------------------------------------------------------------------
+# AS001/AS002: tautological invariant checks — the PR 5 heap shape
+# ---------------------------------------------------------------------------
+
+PR5_TAUTOLOGY = """
+    class Heap:
+        def check_invariants(self):
+            walked = sum(1 for _ in self._occupied)
+            if sum(1 for _ in self._occupied) != len(self._occupied):
+                raise RuntimeError("table mismatch")
+            if walked != walked:
+                raise RuntimeError("unreachable")
+"""
+
+
+def test_as_rules_detect_pr5_heap_tautology():
+    findings = as_mod.analyze_source(
+        textwrap.dedent(PR5_TAUTOLOGY), "repro/core/fixture.py")
+    assert _rules(findings) == ["AS001", "AS002"]
+    as002 = next(f for f in findings if f.rule == "AS002")
+    assert as002.qualname == "Heap.check_invariants"
+    assert "_occupied" in as002.detail
+
+
+def test_as_rules_scope_limited_to_check_functions():
+    src = textwrap.dedent("""
+    def helper(x):
+        return x == x      # silly, but not an invariant check
+
+    def validate_table(t):
+        return t.n == t.n  # flagged: validate_* is in scope
+    """)
+    findings = as_mod.analyze_source(src, "repro/core/fixture.py")
+    assert _rules(findings) == ["AS001"]
+    assert findings[0].qualname == "validate_table"
+
+
+def test_as001_honest_comparison_not_flagged():
+    src = textwrap.dedent("""
+    def check_invariants(table, walked):
+        if sum(1 for _ in walked) != len(table):
+            raise RuntimeError("mismatch")
+    """)
+    assert as_mod.analyze_source(src, "repro/core/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# baseline + CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"schema": 1, "suppressions": [
+        {"rule": "LD001", "key": "a.py::C.m::x", "justification": ""}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(p)
+
+
+def test_baseline_covers_and_unused():
+    f = Finding("LD001", "a.py", 3, "C.m", "x", "msg")
+    b = Baseline([
+        {"rule": "LD001", "key": "a.py::C.m::x", "justification": "ok"},
+        {"rule": "DT001", "key": "b.py::f::time.time",
+         "justification": "stale"}])
+    assert b.covers(f)
+    unsup, sup = split_findings([f], b)
+    assert unsup == [] and sup == [f]
+    assert b.unused([f]) == [("DT001", "b.py::f::time.time")]
+
+
+def test_normalize_path_is_checkout_independent():
+    assert normalize_path("/home/x/repo/src/repro/core/alru.py") == \
+        "repro/core/alru.py"
+    assert normalize_path("src/repro/serve/server.py") == \
+        "repro/serve/server.py"
+    assert normalize_path("repro/api/futures.py") == \
+        "repro/api/futures.py"
+
+
+def _run_cli(*args, cwd=None):
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=str(cwd or REPO_ROOT),
+        env=env)
+
+
+def test_cli_strict_fails_on_finding_and_respects_baseline(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text(textwrap.dedent("""
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+    """), encoding="utf-8")
+    proc = _run_cli("--strict", str(bad))
+    assert proc.returncode == 1
+    assert "LD003" in proc.stdout
+
+    key = f"{tmp_path.name}/mod.py::C::_lock"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"schema": 1, "suppressions": [
+        {"rule": "LD003", "key": key,
+         "justification": "fixture lock, single-threaded"}]}))
+    proc = _run_cli("--strict", "--baseline", str(base), str(bad))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "1 suppressed" in proc.stdout
+
+
+def test_cli_json_and_list_rules(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text("import threading\n\n\nclass C:\n"
+                   "    def __init__(self):\n"
+                   "        self._lock = threading.Lock()\n",
+                   encoding="utf-8")
+    proc = _run_cli("--json", str(bad))
+    data = json.loads(proc.stdout)
+    assert data["files"] == 1
+    assert [f["rule"] for f in data["findings"]] == ["LD003"]
+
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in RULES:
+        assert rule in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# the gate itself: the shipped tree is clean vs the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean_under_committed_baseline():
+    findings, n_files = run_analyses([str(SRC)])
+    unsup, sup = split_findings(findings, Baseline.load())
+    assert n_files > 50
+    assert unsup == [], "\n".join(f.render() for f in unsup)
+    # the baseline documents real intentional patterns, not dead keys
+    assert len(sup) >= 5
+    assert Baseline.load().unused(findings) == []

@@ -71,6 +71,7 @@ _RUNNABLES = {
     "compare.py": "benchmarks.compare",
     "benchmarks.overlap": "benchmarks.overlap",
     "repro.serve": "repro.serve.__main__",
+    "repro.analysis": "repro.analysis",
 }
 
 
