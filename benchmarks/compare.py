@@ -17,8 +17,11 @@ Two classes of checks:
   on the jax backend (half the cache/stage bytes, no f64->f32 staging
   cast — see benchmarks/backends.py), the discrete-event overlap
   lane's structural properties hold (overlap-on makespan <=
-  overlap-off on every policy; blasx COMM fraction <= cublasxt — see
-  benchmarks/overlap.py), the runtime-autotuner lane's properties
+  overlap-off on every policy; blasx COMM fraction <= cublasxt;
+  work-centric Stream-K scheduling strictly improves both makespan
+  and overlap efficiency on every deep-k ragged shape of the ragged
+  sub-lane — see benchmarks/overlap.py), the runtime-autotuner
+  lane's properties
   hold (tuned makespan <= default on every routine x dtype; the second
   tuning pass is a pure cache hit; on the long-tailed fresh shape
   distribution the learned-cost-model ``auto`` mode pays >= 5x fewer
@@ -163,6 +166,22 @@ def check_overlap_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
         gate.note(f"OK   invariant: blasx COMM fraction "
                   f"{summary.get('blasx_comm_fraction')} <= cublasxt "
                   f"{summary.get('cublasxt_comm_fraction')}")
+    ragged = pr_rows.get("overlap/ragged_summary")
+    if ragged is None:
+        gate.fail("overlap/ragged_summary row missing from PR report")
+        return
+    if _num(ragged, "work_centric_improves_all") != 1:
+        bad = [name for name, row in pr_rows.items()
+               if name.startswith("overlap/ragged_")
+               and name != "overlap/ragged_summary"
+               and _num(row, "wc_improves") == 0]
+        gate.fail(
+            "invariant: work-centric scheduling must strictly improve "
+            "both makespan and overlap_efficiency on every deep-k "
+            f"ragged shape (violated by: {bad})")
+    else:
+        gate.note("OK   invariant: work-centric improves makespan AND "
+                  "overlap_efficiency on every ragged shape")
 
 
 def check_autotune_invariants(gate: Gate, pr_rows: Dict[str, dict]) -> None:
@@ -315,6 +334,22 @@ def check_regressions(gate: Gate, pr_rows: Dict[str, dict],
                          _num(pr, "makespan_on"),
                          _num(base, "makespan_on"),
                          tol, higher_is_better=False)
+    # ragged sub-lane: deep-k work-centric rows, also virtual-clock
+    ragged = sorted(name for name in (set(pr_rows) | set(base_rows))
+                    if name.startswith("overlap/ragged_")
+                    and name != "overlap/ragged_summary")
+    for name in ragged:
+        pr, base = both(name)
+        if pr is None:
+            continue
+        gate.check_ratio(name, "makespan_wc",
+                         _num(pr, "makespan_wc"),
+                         _num(base, "makespan_wc"),
+                         tol, higher_is_better=False)
+        gate.check_ratio(name, "wc_speedup",
+                         _num(pr, "wc_speedup"),
+                         _num(base, "wc_speedup"),
+                         tol, higher_is_better=True)
     # autotune lane: virtual-clock metrics, deterministic across hosts
     for routine in ("gemm", "syrk", "syr2k", "symm", "trmm", "trsm"):
         for prec in ("f64", "f32"):

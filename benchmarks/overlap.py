@@ -23,10 +23,26 @@ never exceeds overlap-off, and the cached 4-stream ``blasx`` schedule
 has a COMM fraction no worse than the uncached 2-stream ``cublasxt``
 one.
 
+**Ragged sub-lane** (Stream-K, arXiv 2301.03598): each shape in
+``RAGGED_SHAPES`` — small, ragged, deep-k DGEMMs in the serving
+regime where Eq. 2's owner taskization underfills the machine — is
+scheduled twice, owner mode vs ``RuntimeConfig.work_centric``, on an
+NVLink-class fabric (``RAGGED_BW_SCALE`` x the lane's default link
+bandwidth; at PCI-E bandwidth these shapes are link-bound and
+splitting the k-loop buys nothing).  Per shape: both makespans, both
+overlap efficiencies, and a ``wc_improves`` flag; the
+``overlap/ragged_summary`` row's ``work_centric_improves_all`` is a
+structural invariant gated by ``benchmarks/compare.py`` — the
+work-centric mode must strictly improve *both* metrics on every
+ragged shape.
+
 ``python -m benchmarks.overlap --trace trace_pr.json`` additionally
 runs a small *executing* 2-device DGEMM through a ``BlasxContext``,
 exports its Chrome trace, and validates it against the schema — the CI
-bench-smoke artifact.
+bench-smoke artifact.  ``--trace-wc PATH`` does the same for a ragged
+*work-centric* run and additionally checks the split structure:
+partial and fix-up compute spans present, every fix-up starting
+at-or-after each of its partials' finish.
 """
 from __future__ import annotations
 
@@ -40,6 +56,13 @@ POLICIES = ("blasx", "parsec", "static", "cublasxt")
 SPEEDS = [1.0, 0.8, 1.3]     # fig8's heterogeneous realtime speeds
 NOMINAL = [1.0, 1.0, 1.0]
 
+# ragged sub-lane: small deep-k serving shapes whose owner DoP (4
+# output tiles at T=512) underfills 3 devices x 4 streams, measured on
+# an NVLink-class fabric (see module docstring)
+RAGGED_SHAPES = ((576, 4600, 576), (700, 3900, 520), (520, 4100, 640))
+RAGGED_TILE = 512
+RAGGED_BW_SCALE = 4.0
+
 
 def _shadow(policy: str, overlap: Optional[bool], n: int, tile: int):
     from repro.core.blas3 import shadow_run
@@ -50,6 +73,29 @@ def _shadow(policy: str, overlap: Optional[bool], n: int, tile: int):
         cache_bytes=2 << 30, mode="sim", execute=False,
         overlap_comm=overlap, record_trace=False))
     shadow_run("gemm", n, tile=tile, runtime=rt)
+    return rt
+
+
+def _shadow_ragged(m: int, k: int, n: int, tile: int, work_centric: bool):
+    """One metadata run of a ragged (m, k, n) DGEMM — ``shadow_run`` is
+    square-only, so taskize directly over shape-only matrices."""
+    from repro.core import task as taskmod
+    from repro.core.runtime import BlasxRuntime, RuntimeConfig
+    from repro.core.tiling import ShadowMatrix
+
+    base = RuntimeConfig()
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=3, speeds=SPEEDS, nominal_speeds=NOMINAL,
+        cache_bytes=2 << 30, mode="sim", execute=False,
+        record_trace=False, work_centric=work_centric,
+        h2d_bw=base.h2d_bw * RAGGED_BW_SCALE,
+        d2d_bw=base.d2d_bw * RAGGED_BW_SCALE))
+    mats = {"A": ShadowMatrix("A", m, k, tile),
+            "B": ShadowMatrix("B", k, n, tile),
+            "C": ShadowMatrix("C", m, n, tile)}
+    tasks = taskmod.taskize_gemm(mats["A"].grid, mats["B"].grid,
+                                 mats["C"].grid, "N", "N", 1.0, 0.0)
+    rt.run(tasks, mats, "C")
     return rt
 
 
@@ -102,6 +148,31 @@ def run(quick: bool = True) -> List[Dict]:
         "blasx_comm_fraction": f"{frac['blasx']:.4f}",
         "cublasxt_comm_fraction": f"{frac['cublasxt']:.4f}",
     })
+    # ragged sub-lane: owner vs work-centric on each serving shape
+    wc_flags: List[int] = []
+    for m, k, nn in RAGGED_SHAPES:
+        owner = _metrics(_shadow_ragged(m, k, nn, RAGGED_TILE, False))
+        wc = _metrics(_shadow_ragged(m, k, nn, RAGGED_TILE, True))
+        improves = int(
+            wc["makespan"] < owner["makespan"]
+            and wc["overlap_efficiency"] > owner["overlap_efficiency"])
+        wc_flags.append(improves)
+        rows.append({
+            "name": f"overlap/ragged_{m}x{k}x{nn}",
+            "us_per_call": "",
+            "tile": RAGGED_TILE,
+            "makespan_owner": f"{owner['makespan']:.4f}",
+            "makespan_wc": f"{wc['makespan']:.4f}",
+            "wc_speedup": f"{owner['makespan'] / wc['makespan']:.3f}",
+            "efficiency_owner": f"{owner['overlap_efficiency']:.4f}",
+            "efficiency_wc": f"{wc['overlap_efficiency']:.4f}",
+            "wc_improves": improves,
+        })
+    rows.append({
+        "name": "overlap/ragged_summary",
+        "us_per_call": "",
+        "work_centric_improves_all": int(all(wc_flags)),
+    })
     return rows
 
 
@@ -130,6 +201,52 @@ def export_trace(path: str) -> dict:
     return tr
 
 
+def export_trace_wc(path: str) -> dict:
+    """CI artifact: an *executing* ragged work-centric DGEMM traced end
+    to end.  Beyond the event-engine schema gate this validates the
+    Stream-K structure itself: partial and fix-up compute spans are
+    present, and every fix-up reduction starts at-or-after each of its
+    sibling partials' finish (the deterministic join order)."""
+    import numpy as np
+
+    from repro.api import BlasxContext
+    from repro.core.events import trace_spans, validate_trace
+    from repro.core.runtime import RuntimeConfig
+
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((1100, 900))
+    B = rng.standard_normal((900, 700))
+    with BlasxContext(RuntimeConfig(n_devices=2, mode="sim",
+                                    work_centric=True),
+                      tile=512) as ctx:
+        out = ctx.gemm(A, B)
+        ref = A @ B
+        np.testing.assert_allclose(out.array(), ref, rtol=1e-10,
+                                   atol=1e-10)
+        tr = ctx.trace(path)
+    summary = validate_trace(tr)
+    compute = [s for s in trace_spans(tr) if s["cat"] == "compute"]
+    partials = [s for s in compute if s["kind"] == "partial"]
+    fixups = {s["task_id"]: s for s in compute if s["kind"] == "fixup"}
+    if not partials or not fixups:
+        raise ValueError(
+            f"work-centric trace lacks split spans: "
+            f"{len(partials)} partial / {len(fixups)} fixup")
+    for p in partials:
+        f = fixups.get(p["parent"])
+        if f is None:
+            raise ValueError(f"partial task {p['task_id']} has no "
+                             f"fix-up span (parent {p['parent']})")
+        if f["start"] < p["end"] - 1e-9:
+            raise ValueError(
+                f"fix-up {f['task_id']} starts at {f['start']} before "
+                f"its partial {p['task_id']} ends at {p['end']}")
+    print(f"# wc trace: {summary['spans']} spans, "
+          f"{len(partials)} partials joined by {len(fixups)} fix-ups "
+          f"-> {path}")
+    return tr
+
+
 def main(argv=None) -> int:
     import argparse
 
@@ -143,15 +260,22 @@ def main(argv=None) -> int:
                          "INSTEAD of running the lane (the CI artifact "
                          "step; the lane itself already ran via "
                          "benchmarks.run --quick)")
+    ap.add_argument("--trace-wc", metavar="PATH",
+                    help="export + validate an executing work-centric "
+                         "ragged DGEMM trace, including the Stream-K "
+                         "structural checks (partial/fix-up spans, "
+                         "join ordering) — the CI artifact step")
     ap.add_argument("--validate", metavar="PATH",
                     help="round-trip an exported trace file through the "
                          "schema validator and exit non-zero on "
                          "violations (the CI gate step)")
     args = ap.parse_args(argv)
-    if not args.trace and not args.validate:
+    if not args.trace and not args.trace_wc and not args.validate:
         print(rows_to_csv(run()))
     if args.trace:
         export_trace(args.trace)
+    if args.trace_wc:
+        export_trace_wc(args.trace_wc)
     if args.validate:
         from repro.core.events import main as validate_main
         return validate_main([args.validate])

@@ -609,11 +609,14 @@ class BlasxContext:
             return
         if self.runtime.runs > 0 or self.n_calls > 0:
             return
+        wc = bool(getattr(best, "work_centric", False))
         if (best.n_streams == self.cfg.n_streams
-                and best.policy == self.cfg.policy):
+                and best.policy == self.cfg.policy
+                and wc == self.cfg.work_centric):
             return
         cfg = dataclasses.replace(self.cfg, n_streams=best.n_streams,
-                                  rs_slots=None, policy=best.policy)
+                                  rs_slots=None, policy=best.policy,
+                                  work_centric=wc)
         self.runtime = BlasxRuntime(cfg)
         self.cfg = cfg
 
@@ -664,7 +667,8 @@ class BlasxContext:
             rep["enabled"] = self._auto_tune
             rep["applied"] = {"tile_default": self.tile_size,
                               "n_streams": self.cfg.n_streams,
-                              "policy": self.cfg.policy}
+                              "policy": self.cfg.policy,
+                              "work_centric": self.cfg.work_centric}
             return rep
 
     # ======================================================== L3 routines

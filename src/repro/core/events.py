@@ -85,6 +85,8 @@ class TimedTask:
     routine: str = ""
     steps: int = 0
     flops: int = 0
+    kind: str = "owner"  # owner | partial | fixup (work-centric mode)
+    parent: Optional[int] = None  # partial's owner task (fix-up keeps it)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +101,8 @@ class Span:
     dur: float
     nbytes: int = 0
     task_id: int = -1
+    kind: str = ""  # task kind of a compute span ("" for transfers)
+    parent: Optional[int] = None  # owner task of a partial's span
 
 
 class LinkTimeline:
@@ -224,7 +228,8 @@ class EventEngine:
 
     def _emit(self, device: int, lane: int, cat: str, name: str,
               start: float, dur: float, nbytes: int = 0,
-              task_id: int = -1) -> None:
+              task_id: int = -1, kind: str = "",
+              parent: Optional[int] = None) -> None:
         if not self.record:
             return
         if len(self.spans) >= MAX_TRACE_SPANS:
@@ -232,7 +237,8 @@ class EventEngine:
             return
         self.spans.append(Span(device=device, lane=lane, cat=cat,
                                name=name, start=start, dur=dur,
-                               nbytes=nbytes, task_id=task_id))
+                               nbytes=nbytes, task_id=task_id, kind=kind,
+                               parent=parent))
 
     # ----------------------------------------------------------- schedule
     def schedule_batch(self, device: int, start: float,
@@ -272,7 +278,8 @@ class EventEngine:
                     cursor = s + x.secs
                 if item.compute_s > 0.0:
                     self._emit(device, 0, "compute", item.name, cursor,
-                               item.compute_s, task_id=item.task_id)
+                               item.compute_s, task_id=item.task_id,
+                               kind=item.kind, parent=item.parent)
                     cursor += item.compute_s
                 wb = item.writeback
                 if wb is not None and wb.secs > 0.0:
@@ -298,7 +305,8 @@ class EventEngine:
             if item.compute_s > 0.0:
                 self._emit(device, idx % n_lanes, "compute", item.name,
                            arrivals[idx], compute_end[idx] - arrivals[idx],
-                           task_id=item.task_id)
+                           task_id=item.task_id, kind=item.kind,
+                           parent=item.parent)
             cursor = compute_end[idx]
             wb = item.writeback
             if wb is not None and wb.secs > 0.0:
@@ -363,6 +371,10 @@ def build_chrome_trace(spans: Sequence[Span], n_devices: int,
             args: Dict[str, object] = {"task_id": sp.task_id}
             if sp.nbytes:
                 args["nbytes"] = sp.nbytes
+            if sp.kind:
+                args["kind"] = sp.kind
+            if sp.parent is not None:
+                args["parent"] = sp.parent
             events.append({"name": sp.name, "cat": sp.cat, "ph": "B",
                            "ts": sp.start * 1e6, "pid": dev, "tid": lane,
                            "args": args})
@@ -468,9 +480,13 @@ def trace_spans(trace: dict) -> List[dict]:
             stack = stacks.get((ev["pid"], ev["tid"]))
             if stack:
                 b = stack.pop()
+                args = b.get("args") or {}
                 out.append({"pid": ev["pid"], "tid": ev["tid"],
                             "cat": b.get("cat"), "name": b.get("name"),
-                            "start": b["ts"], "end": ev["ts"]})
+                            "start": b["ts"], "end": ev["ts"],
+                            "kind": args.get("kind", ""),
+                            "task_id": args.get("task_id", -1),
+                            "parent": args.get("parent")})
     return out
 
 

@@ -42,7 +42,8 @@ from .coherence import MesixDirectory
 from .dtypes import promote_dtypes
 from .events import EventEngine, TimedTask, TimedXfer
 from .heap import BlasxHeap
-from .task import Ledger, Task, TileRef
+from . import task as taskmod
+from .task import KIND_FIXUP, KIND_PARTIAL, Ledger, Task, TileRef
 from .taskqueue import ReadyQueue, ReservationStation
 from .tile_kernels import get_solver, materialize
 from .tiling import TiledMatrix, TileKey
@@ -106,6 +107,14 @@ class RuntimeConfig:
     # behaviour, no numerics.  Lets benchmarks run at the paper's true
     # scale (N=16384..40K, T=1024) on this 1-core host.
     execute: bool = True
+    # work-centric (Stream-K) scheduling: split the k-loop of ragged /
+    # underfilled output tiles (and of every tile of a small problem)
+    # into partial tasks joined by a deterministic fix-up reduction —
+    # see repro.core.task.plan_work_centric.  Numerics are bitwise
+    # identical to owner mode; only the schedule (and modeled clocks)
+    # change.  Searched by the runtime autotuner alongside tile size,
+    # n_streams and policy.
+    work_centric: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -293,6 +302,10 @@ class BlasxRuntime:
         self.runs += 1
         if not tasks:
             return
+        if self.cfg.work_centric:
+            tasks = taskmod.plan_work_centric(
+                tasks, {mid: m.grid for mid, m in matrices.items()},
+                self.cfg.n_devices * self.cfg.effective_streams)
         self._matrices = matrices
         self._out_id = out_id
         if self.cfg.static_assignment:
@@ -574,6 +587,12 @@ class BlasxRuntime:
                     rec.task.flops / (d.speed * self.cfg.peak_flops))
                 d.ledger.tasks += 1
                 d.ledger.flops += rec.task.flops
+                if rec.task.kind == KIND_PARTIAL:
+                    d.ledger.partial_tasks += 1
+                    d.ledger.partial_flops += rec.task.flops
+                elif rec.task.kind == KIND_FIXUP:
+                    d.ledger.fixup_tasks += 1
+                    d.ledger.fixup_flops += rec.task.flops
         except BaseException:
             # a failing batch must not leave its acquired tiles pinned:
             # the readers would never hit the release below, permanently
@@ -614,7 +633,8 @@ class BlasxRuntime:
                 task_id=t.task_id,
                 name=f"{t.routine} C[{t.i},{t.j}]",
                 compute_s=comp, fetches=rec.xfers, writeback=rec.wb,
-                routine=t.routine, steps=len(t.steps), flops=t.flops))
+                routine=t.routine, steps=len(t.steps), flops=t.flops,
+                kind=t.kind, parent=t.parent))
         span, finishes, busy = self._engine.schedule_batch(
             d.id, start, items, self.cfg.effective_streams,
             self.cfg.overlap)
@@ -689,7 +709,11 @@ class BlasxRuntime:
         step_groups: Dict[StepGroupKey, List[Tuple[_TaskExec, int]]] = {}
         for rec in recs:
             t = rec.task
-            if not t.steps:
+            if not t.steps or t.kind == KIND_PARTIAL:
+                # a partial-k task only prefetches and models compute;
+                # its fix-up re-dispatches the whole k-loop through
+                # this very path, so skipping here keeps launch counts
+                # and numerics identical to owner mode
                 continue
             keys = [self._step_key(t, step, rec.a_tiles[i], rec.b_tiles[i])
                     for i, step in enumerate(t.steps)]
@@ -729,6 +753,13 @@ class BlasxRuntime:
     def _finalize_task(self, d: DeviceSim, rec: "_TaskExec") -> float:
         """Phase 3: per-task epilogue + write-back; returns comm secs."""
         t = rec.task
+        if t.kind == KIND_PARTIAL:
+            # the sibling fix-up performs the owner-identical numerics
+            # and the ONLY write of C_ij: partials never touch the
+            # coherence directory and spill no accumulator (the modeled
+            # join traffic is the fix-up's re-gather of the k-range
+            # tiles the partials left warm in peer L1s)
+            return 0.0
         out_grid = self._matrices[self._out_id]
         comm_s = 0.0
         if self.cfg.execute:

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .tiling import TileGrid, TileKey
+from .tiling import TileGrid, TileKey, split_ranges, workcentric_parts
 
 
 @dataclasses.dataclass
@@ -64,6 +64,14 @@ class Ledger:
     batched_groups: int = 0
     kernel_launches: int = 0
     engine_flops: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # work-centric (Stream-K) attribution: how much of this device's
+    # scheduled work was partial-k tasks vs. fix-up reductions.  Owner
+    # tasks are ``tasks - partial_tasks - fixup_tasks``; partial flops
+    # are the k-range MAC shares, fixup flops the join + epilogue cost.
+    partial_tasks: int = 0
+    fixup_tasks: int = 0
+    partial_flops: int = 0
+    fixup_flops: int = 0
 
     @property
     def overlap_efficiency(self) -> float:
@@ -109,6 +117,15 @@ class Finalize:
     unit_diag: bool
 
 
+# work-centric (Stream-K) task kinds — see ``plan_work_centric``
+KIND_OWNER = "owner"      # Eq. 2 tile-owner task: full k-loop + epilogue
+KIND_PARTIAL = "partial"  # one k-range of a split tile: gather + modeled
+                          # compute only, never writes C_ij
+KIND_FIXUP = "fixup"      # deterministic join: re-dispatches the whole
+                          # k-loop (owner-identical numerics) and does
+                          # the only write of C_ij
+
+
 @dataclasses.dataclass
 class Task:
     task_id: int
@@ -126,6 +143,12 @@ class Task:
     # BLAS triangle semantics for diagonal tiles of SYRK/SYR2K: only this
     # triangle of the output tile is written; the rest keeps original C.
     out_mask: Optional[str] = None     # None | 'tri_u' | 'tri_l'
+    # work-centric decomposition (KIND_*): partials carry the owner's
+    # task id in ``parent`` and their steps slice in ``k_range``; the
+    # fix-up keeps the owner's own id so downstream deps stay wired.
+    kind: str = KIND_OWNER
+    parent: Optional[int] = None
+    k_range: Optional[Tuple[int, int]] = None
 
     def input_refs(self) -> List[TileRef]:
         """Every cacheable input tile (for Eq. 3 priority + transfers)."""
@@ -376,6 +399,81 @@ def _tri_fill(uplo: str, diag: str) -> str:
     if uplo == "U":
         return FILL_TRI_UU if diag == "U" else FILL_TRI_U
     return FILL_TRI_LU if diag == "U" else FILL_TRI_L
+
+
+# --------------------------------------------------------------------------
+# Work-centric (Stream-K) split planner — arXiv 2301.03598, beyond the paper
+# --------------------------------------------------------------------------
+def plan_work_centric(tasks: Sequence[Task], grids: Dict[str, TileGrid],
+                      capacity: int) -> List[Task]:
+    """Re-taskize an owner-mode task list so task count tracks FLOPs
+    instead of output-tile count (Eq. 2's failure mode on small and
+    ragged problems).
+
+    Boundary/underfilled output tiles — and *every* tile of a problem
+    whose owner-task count is below the device x stream ``capacity`` —
+    get their k-loop cut into contiguous partial-k tasks
+    (:func:`~repro.core.tiling.workcentric_parts` /
+    :func:`~repro.core.tiling.split_ranges`), joined by one fix-up
+    reduction task per split tile.
+
+    Determinism rule (why numerics stay bitwise-identical to owner
+    mode): a partial task carries only the *modeled* cost of its
+    k-range — its gathers warm the caches and its flops share drives
+    the virtual clock — but it never produces bytes of C_ij.  The
+    fix-up keeps the owner task's id (downstream ``deps`` stay wired),
+    re-dispatches the **full original k-loop** through the identical
+    backend path, and performs the only write of C_ij.  The schedule
+    (and the time model, and the backend) can therefore never change
+    results; only modeled clocks move.  The fix-up's ``flops`` charge
+    the join (one tile-sized add per partial) plus any finalize solve,
+    not the MAC work already attributed to its partials.
+    """
+    tasks = list(tasks)
+    if not tasks or capacity <= 0:
+        return tasks
+    n_owner = len(tasks)
+    out_key_of = {t.task_id: t.out for t in tasks}
+    next_id = max(t.task_id for t in tasks) + 1
+    planned: List[Task] = []
+    for t in tasks:
+        grid = grids[t.out.matrix_id]
+        h, w = grid.tile_shape(t.i, t.j)
+        ragged = h != grid.tile or w != grid.tile
+        n_parts = workcentric_parts(len(t.steps), n_owner, capacity, ragged)
+        if n_parts <= 1:
+            planned.append(t)
+            continue
+        # map deps to the k-steps that read their produced tile, so a
+        # partial only waits on the producers of its own k-range; a dep
+        # matching no step (defensive) stays on every piece
+        step_keys = [{s.a.key, s.b.key} for s in t.steps]
+        dep_steps = {}
+        for d in t.deps:
+            okey = out_key_of.get(d)
+            idxs = {i for i, ks in enumerate(step_keys) if okey in ks}
+            if idxs:
+                dep_steps[d] = idxs
+        step_fl = [_step_flops(grids, s) for s in t.steps]
+        partial_ids = []
+        for start, stop in split_ranges(len(t.steps), n_parts):
+            span = set(range(start, stop))
+            pdeps = tuple(d for d in t.deps
+                          if d not in dep_steps or dep_steps[d] & span)
+            planned.append(Task(
+                task_id=next_id, routine=t.routine, out=t.out, i=t.i,
+                j=t.j, steps=t.steps[start:stop], alpha=t.alpha, beta=0.0,
+                deps=pdeps, flops=sum(step_fl[start:stop]),
+                kind=KIND_PARTIAL, parent=t.task_id,
+                k_range=(start, stop)))
+            partial_ids.append(next_id)
+            next_id += 1
+        solve_fl = max(0, t.flops - sum(step_fl))
+        planned.append(dataclasses.replace(
+            t, deps=t.deps + tuple(partial_ids),
+            flops=n_parts * h * w + solve_fl,
+            kind=KIND_FIXUP, k_range=(0, len(t.steps))))
+    return planned
 
 
 def total_flops(tasks: Sequence[Task]) -> int:

@@ -147,6 +147,74 @@ class ShadowMatrix:
         raise RuntimeError("ShadowMatrix holds no data (execute=False runs)")
 
 
-def degree_of_parallelism(m: int, n: int, tile: int) -> int:
-    """Paper Eq. 2: ceil(M/T) * ceil(N/T) independent output tiles."""
-    return math.ceil(m / tile) * math.ceil(n / tile)
+def workcentric_parts(n_steps: int, n_owner: int, capacity: int,
+                      ragged: bool) -> int:
+    """How many partial-k tasks the work-centric split planner carves
+    from one task's k-loop (Stream-K, arXiv 2301.03598); 0 leaves the
+    task in owner form.
+
+    Two triggers (see ``repro.core.task.plan_work_centric``):
+
+    * *small problem* — the whole owner-task count is below the
+      machine's device x stream ``capacity``, so every splittable task
+      is cut into enough pieces to roughly fill two full waves;
+    * *boundary tile* — on large problems only ragged output tiles
+      split (in half), shortening the tail without perturbing the
+      interior schedule.
+
+    Deterministic and purely arithmetic so
+    :func:`degree_of_parallelism` and the tuning-layer step estimates
+    can mirror the planner exactly.
+    """
+    if n_steps < 2 or capacity <= 0 or n_owner <= 0:
+        return 0
+    if n_owner < capacity:
+        return min(n_steps, max(2, -(-2 * capacity // n_owner)))
+    if ragged:
+        return min(n_steps, 2)
+    return 0
+
+
+def split_ranges(n_steps: int, n_parts: int) -> list:
+    """Partition ``range(n_steps)`` into ``n_parts`` contiguous
+    ``(start, stop)`` k-ranges whose sizes differ by at most one."""
+    if n_parts <= 0:
+        raise ValueError("n_parts must be positive")
+    n_parts = min(n_parts, n_steps)
+    base, extra = divmod(n_steps, n_parts)
+    out = []
+    start = 0
+    for p in range(n_parts):
+        stop = start + base + (1 if p < extra else 0)
+        out.append((start, stop))
+        start = stop
+    return out
+
+
+def degree_of_parallelism(m: int, n: int, tile: int, k: int = None,
+                          work_centric: bool = False,
+                          capacity: int = 8) -> int:
+    """Paper Eq. 2: ceil(M/T) * ceil(N/T) independent output tiles.
+
+    Under the work-centric mode the owner-only count undercounts what
+    the scheduler actually sees: every split tile contributes its
+    partial-k tasks *plus* the fix-up reduction.  ``k`` (defaults to
+    ``m``) sets the k-loop depth and ``capacity`` the device x stream
+    budget the split planner fills against (the default matches the
+    stock 2-device, 4-stream :class:`~repro.core.runtime.RuntimeConfig`).
+    """
+    rows = math.ceil(m / tile)
+    cols = math.ceil(n / tile)
+    owner = rows * cols
+    if not work_centric:
+        return owner
+    kk = m if k is None else k
+    n_steps = max(1, math.ceil(kk / tile))
+    parts = workcentric_parts(n_steps, owner, capacity, ragged=True)
+    if parts == 0:
+        return owner
+    if owner < capacity:
+        split = owner
+    else:
+        split = owner - (m // tile) * (n // tile)
+    return owner + split * parts

@@ -76,6 +76,10 @@ DEFAULT_STREAM_CANDIDATES = (2, 4, 8)
 # static speed-proportional split (which wins when stealing/priority
 # overhead buys nothing, e.g. perfectly regular single-routine sweeps)
 DEFAULT_POLICY_CANDIDATES = ("blasx", "static")
+# taskization modes worth trying: owner (Eq. 2) and the Stream-K
+# work-centric split (repro.core.task.plan_work_centric) — the latter
+# wins on small/ragged shapes where owner DoP underfills the machine
+DEFAULT_WORK_CENTRIC_CANDIDATES = (False, True)
 
 # shadow-run budget: skip candidate tiles whose taskization would
 # schedule more than this many k-steps (a metadata sweep should stay
@@ -93,10 +97,22 @@ MIN_PREDICTED_GAIN = 0.03
 
 
 def shape_bucket(m: int, k: int, n: int) -> Tuple[int, int, int]:
-    """Round each dimension up to the next power of two (floor 64): one
-    sweep serves every shape in the bucket."""
+    """Round each dimension up to the next bucket edge (floor 64): one
+    sweep serves every shape in the bucket.
+
+    Edges are powers of two *plus their geometric midpoints*
+    ``round(2^p / sqrt(2))``: pure next-power-of-two rounding aliased a
+    4100^3 problem into the 8192^3 bucket — nearly 8x the FLOPs — so a
+    sweep could crown a tile that loses at the true shape (the ragged
+    regime of arXiv 2406.19621).  With the midpoint edge the worst-case
+    per-dimension inflation drops from 2x to sqrt(2)x (<= ~2.83x in
+    FLOPs for a cubic problem), while buckets stay coarse enough that
+    one sweep still serves a neighbourhood of shapes.  Idempotent:
+    ``up(up(x)) == up(x)``."""
     def up(x: int) -> int:
-        return max(MIN_BUCKET, 1 << max(0, math.ceil(math.log2(max(1, x)))))
+        p = 1 << max(0, math.ceil(math.log2(max(1, x))))
+        half = round(p / math.sqrt(2))
+        return max(MIN_BUCKET, half if x <= half else p)
     return (up(m), up(k), up(n))
 
 
@@ -124,6 +140,7 @@ class TunedConfig:
     default_makespan: float   # the fixed-default config's makespan
     source: str               # "swept" | "model" | "cache" | "cache-file"
     key: str = ""
+    work_centric: bool = False  # Stream-K split taskization won
 
     @property
     def speedup_vs_default(self) -> float:
@@ -216,6 +233,8 @@ class Autotuner:
                  tiles: Sequence[int] = DEFAULT_TILE_CANDIDATES,
                  streams: Sequence[int] = DEFAULT_STREAM_CANDIDATES,
                  policies: Sequence[str] = DEFAULT_POLICY_CANDIDATES,
+                 work_centric: Sequence[bool] =
+                 DEFAULT_WORK_CENTRIC_CANDIDATES,
                  default_tile: int = 256,
                  min_model_rows: int = modelmod.MIN_ROWS,
                  max_model_rmse: float = modelmod.MAX_RMSE):
@@ -228,6 +247,7 @@ class Autotuner:
         self.tiles = tuple(tiles)
         self.streams = tuple(streams)
         self.policies = tuple(policies)
+        self.work_centric = tuple(bool(w) for w in work_centric)
         self.default_tile = int(default_tile)
         self.min_model_rows = int(min_model_rows)
         self.max_model_rmse = float(max_model_rmse)
@@ -285,7 +305,9 @@ class Autotuner:
                                policy=entry["policy"],
                                makespan=entry["makespan"],
                                default_makespan=entry["default_makespan"],
-                               source=source, key=key)
+                               source=source, key=key,
+                               work_centric=bool(
+                                   entry.get("work_centric", False)))
             self._events.append({"key": key, "source": source,
                                  "swept": 0, **entry})
             return best
@@ -300,14 +322,15 @@ class Autotuner:
     # --------------------------------------------------------- sweep path
     def _sweep(self, routine: str, bucket: Tuple[int, int, int],
                dt_name: str, key: str,
-               candidates: List[Tuple[int, int, str]]) -> TunedConfig:
+               candidates: List[Tuple[int, int, str, bool]]) -> TunedConfig:
         results = []
-        for tile, ns, policy in candidates:
+        for tile, ns, policy, wc in candidates:
             span = self._shadow_makespan(routine, bucket, tile, dt_name,
-                                         ns, policy)
+                                         ns, policy, wc)
             self.sweeps += 1
             results.append({"tile": tile, "n_streams": ns,
-                            "policy": policy, "makespan": span})
+                            "policy": policy, "work_centric": wc,
+                            "makespan": span})
         self.bucket_sweeps += 1
         # candidate zero IS the fixed default: the argmin can therefore
         # never be worse than it (the acceptance invariant)
@@ -323,7 +346,8 @@ class Autotuner:
                            policy=best_row["policy"],
                            makespan=best_row["makespan"],
                            default_makespan=default_span,
-                           source="swept", key=key)
+                           source="swept", key=key,
+                           work_centric=best_row["work_centric"])
 
     # --------------------------------------------------------- model path
     def _ensure_model(self) -> Optional[modelmod.CostModel]:
@@ -370,8 +394,9 @@ class Autotuner:
             return None
         topo = self.cfg.topology()
         preds = [model.predict(modelmod.features(
-            routine, bucket, dt_name, topo, tile, ns, policy))
-            for tile, ns, policy in candidates]
+            routine, bucket, dt_name, topo, tile, ns, policy,
+            work_centric=wc))
+            for tile, ns, policy, wc in candidates]
         win_idx = min(range(len(preds)), key=preds.__getitem__)
         if preds[win_idx] >= preds[0] * (1 - MIN_PREDICTED_GAIN):
             win_idx = 0          # predicted win is inside model noise
@@ -380,24 +405,28 @@ class Autotuner:
         # default is the other half of the tuned<=default guarantee
         # (free when the model already picked the default itself)
         win_span = self._shadow_makespan(routine, bucket, winner[0],
-                                         dt_name, winner[1], winner[2])
+                                         dt_name, winner[1], winner[2],
+                                         winner[3])
         self.sweeps += 1
         self.confirmations += 1
         if winner == default:
             default_span = win_span
             measured = [{"tile": winner[0], "n_streams": winner[1],
-                         "policy": winner[2], "makespan": win_span}]
+                         "policy": winner[2], "work_centric": winner[3],
+                         "makespan": win_span}]
         else:
             default_span = self._shadow_makespan(
                 routine, bucket, default[0], dt_name, default[1],
-                default[2])
+                default[2], default[3])
             self.sweeps += 1
             self.confirmations += 1
             measured = [
                 {"tile": default[0], "n_streams": default[1],
-                 "policy": default[2], "makespan": default_span},
+                 "policy": default[2], "work_centric": default[3],
+                 "makespan": default_span},
                 {"tile": winner[0], "n_streams": winner[1],
-                 "policy": winner[2], "makespan": win_span},
+                 "policy": winner[2], "work_centric": winner[3],
+                 "makespan": win_span},
             ]
         if win_span > default_span * (1 + 1e-12):
             # prediction disproved by measurement: the guarantee is
@@ -412,7 +441,8 @@ class Autotuner:
                 "default_makespan": default_span})
             return None
         best_row = {"tile": winner[0], "n_streams": winner[1],
-                    "policy": winner[2], "makespan": win_span}
+                    "policy": winner[2], "work_centric": winner[3],
+                    "makespan": win_span}
         # only MEASURED rows enter "candidates" (the training set);
         # predictions ride along separately for introspection
         entry = self._entry(routine, bucket, dt_name, best_row,
@@ -429,7 +459,8 @@ class Autotuner:
         return TunedConfig(tile=winner[0], n_streams=winner[1],
                            policy=winner[2], makespan=win_span,
                            default_makespan=default_span,
-                           source="model", key=key)
+                           source="model", key=key,
+                           work_centric=winner[3])
 
     # ------------------------------------------------------------ helpers
     def _entry(self, routine: str, bucket: Tuple[int, int, int],
@@ -439,6 +470,7 @@ class Autotuner:
             "routine": routine, "bucket": list(bucket), "dtype": dt_name,
             "tile": best_row["tile"], "n_streams": best_row["n_streams"],
             "policy": best_row["policy"],
+            "work_centric": best_row.get("work_centric", False),
             "makespan": best_row["makespan"],
             "default_makespan": default_span,
             "candidates": measured,
@@ -455,55 +487,80 @@ class Autotuner:
         default' would quietly refer to someone else's default."""
         return {
             "default": [self.default_tile, self.cfg.n_streams,
-                        self.cfg.policy],
+                        self.cfg.policy, bool(self.cfg.work_centric)],
             "tiles": list(self.tiles),
             "streams": list(self.streams),
             "policies": list(self.policies),
+            "work_centric": list(self.work_centric),
         }
 
     def _candidates(self, routine: str,
-                    bucket: Tuple[int, int, int]) -> List[Tuple[int, int, str]]:
+                    bucket: Tuple[int, int, int]
+                    ) -> List[Tuple[int, int, str, bool]]:
         """Ordered candidate list; the fixed default config comes first
         and is never budget-filtered."""
         m, k, n = bucket
-        default = (self.default_tile, self.cfg.n_streams, self.cfg.policy)
+        default = (self.default_tile, self.cfg.n_streams, self.cfg.policy,
+                   bool(self.cfg.work_centric))
         out = [default]
+        capacity = self.cfg.n_devices * self.cfg.effective_streams
         for tile in self.tiles:
             if tile > max(m, k, n):
                 continue            # degenerate: one tile holds everything
-            if self._step_estimate(routine, bucket, tile) > MAX_SHADOW_STEPS:
-                continue            # sweep budget: skip pathological grids
-            for ns in self.streams:
-                for policy in self.policies:
-                    cand = (tile, ns, policy)
-                    if cand != default and cand not in out:
-                        out.append(cand)
+            for wc in self.work_centric:
+                if self._step_estimate(routine, bucket, tile,
+                                       work_centric=wc,
+                                       capacity=capacity) > MAX_SHADOW_STEPS:
+                    continue        # sweep budget: skip pathological grids
+                for ns in self.streams:
+                    for policy in self.policies:
+                        cand = (tile, ns, policy, bool(wc))
+                        if cand != default and cand not in out:
+                            out.append(cand)
         return out
 
     @staticmethod
     def _step_estimate(routine: str, bucket: Tuple[int, int, int],
-                       tile: int) -> int:
+                       tile: int, work_centric: bool = False,
+                       capacity: int = 8) -> int:
+        """Scheduled k-step count of one candidate taskization — the
+        sweep-budget yardstick and (mirrored in ``repro.tuning.model``)
+        the cost model's ``lsteps`` feature.  Under the work-centric
+        mode every split tile re-walks its k-loop once more (the
+        partials' slices plus the fix-up's full re-dispatch), mirroring
+        :func:`repro.core.tiling.workcentric_parts`: all tiles split on
+        small problems (owner count below ``capacity``), only ragged
+        boundary tiles split on large ones."""
         m, k, n = bucket
         rows = math.ceil(m / tile)
         cols = math.ceil(n / tile)
         depth = math.ceil(k / tile)
+        factor = 1
         if routine in ("syrk", "syr2k"):
             rows = cols = math.ceil(n / tile)
-            return rows * (rows + 1) // 2 * depth * (2 if routine == "syr2k"
-                                                     else 1)
-        if routine in ("symm", "trmm", "trsm"):
-            depth = math.ceil(m / tile)
-        return rows * cols * depth
+            ntasks = rows * (rows + 1) // 2
+            factor = 2 if routine == "syr2k" else 1
+            interior = (n // tile) * ((n // tile) + 1) // 2
+        else:
+            if routine in ("symm", "trmm", "trsm"):
+                depth = math.ceil(m / tile)
+            ntasks = rows * cols
+            interior = (m // tile) * (n // tile)
+        base = ntasks * depth * factor
+        if not work_centric or depth * factor < 2:
+            return base
+        split = ntasks if ntasks < capacity else max(0, ntasks - interior)
+        return base + split * depth * factor
 
     def _shadow_makespan(self, routine: str, bucket: Tuple[int, int, int],
                          tile: int, dtype: str, n_streams: int,
-                         policy: str) -> float:
+                         policy: str, work_centric: bool = False) -> float:
         """One metadata-only run of (routine, bucket) under a candidate
         config; returns the virtual-clock makespan."""
         cfg = dataclasses.replace(
             self.cfg, mode="sim", time_model="events", execute=False,
             record_trace=False, n_streams=n_streams, rs_slots=None,
-            policy=policy)
+            policy=policy, work_centric=work_centric)
         tasks, mats, out_id = _shadow_tasks(routine, bucket, tile, dtype)
         rt = BlasxRuntime(cfg)
         rt.run(tasks, mats, out_id)
@@ -535,5 +592,6 @@ class Autotuner:
             "tile_candidates": list(self.tiles),
             "stream_candidates": list(self.streams),
             "policy_candidates": list(self.policies),
+            "work_centric_candidates": list(self.work_centric),
             "entries": [dict(e) for e in self._events],
         }

@@ -61,28 +61,43 @@ MIN_ROWS = 24
 MAX_RMSE = 0.35
 
 
-def _step_estimate(routine: str, bucket, tile: int) -> int:
+def _step_estimate(routine: str, bucket, tile: int,
+                   work_centric: bool = False, capacity: int = 8) -> int:
     """Per-routine tile-task k-step count (mirrors
     ``Autotuner._step_estimate``; duplicated here so the model module
-    stays importable without the tuner)."""
+    stays importable without the tuner).  Under the work-centric mode
+    every split tile re-walks its k-loop once more — the partials'
+    slices plus the fix-up's full re-dispatch — mirroring
+    ``repro.core.tiling.workcentric_parts``: all tiles split on small
+    problems (owner count below ``capacity``), only ragged boundary
+    tiles split on large ones."""
     m, k, n = bucket
     rows = math.ceil(m / tile)
     cols = math.ceil(n / tile)
     depth = math.ceil(k / tile)
+    factor = 1
     if routine in ("syrk", "syr2k"):
         rows = cols = math.ceil(n / tile)
-        return rows * (rows + 1) // 2 * depth * (2 if routine == "syr2k"
-                                                 else 1)
-    if routine in ("symm", "trmm", "trsm"):
-        depth = math.ceil(m / tile)
-    return rows * cols * depth
+        ntasks = rows * (rows + 1) // 2
+        factor = 2 if routine == "syr2k" else 1
+        interior = (n // tile) * ((n // tile) + 1) // 2
+    else:
+        if routine in ("symm", "trmm", "trsm"):
+            depth = math.ceil(m / tile)
+        ntasks = rows * cols
+        interior = (m // tile) * (n // tile)
+    base = ntasks * depth * factor
+    if not work_centric or depth * factor < 2:
+        return base
+    split = ntasks if ntasks < capacity else max(0, ntasks - interior)
+    return base + split * depth * factor
 
 
 def feature_names(topology: Dict[str, object]) -> List[str]:
     """Stable feature ordering for a given topology field set."""
     names = ["lm", "lk", "ln", "aspect_mn", "aspect_mk", "litemsize",
              "ltile", "ltile2", "ltile_x_dims", "lstreams", "lstreams2",
-             "lsteps"]
+             "lsteps", "work_centric"]
     names += [f"routine_{r}" for r in ROUTINES]
     names += [f"policy_{p}" for p in POLICIES]
     names += [f"topo_{k}" for k in sorted(topology)
@@ -92,7 +107,7 @@ def feature_names(topology: Dict[str, object]) -> List[str]:
 
 def features(routine: str, bucket, dtype_name: str,
              topology: Dict[str, object], tile: int, n_streams: int,
-             policy: str) -> Dict[str, float]:
+             policy: str, work_centric: bool = False) -> Dict[str, float]:
     """One feature dict for a (problem, candidate) pair.
 
     Everything multiplicative lives in log2 space — makespan is
@@ -100,11 +115,15 @@ def features(routine: str, bucket, dtype_name: str,
     log is roughly linear in these.  ``ltile2`` and ``ltile_x_dims``
     give the regression the curvature to place Fig. 10's interior
     optimum; ``lsteps`` encodes the routine-specific task count the
-    schedule actually dispatches."""
+    schedule actually dispatches (partial-k tasks included when the
+    candidate runs work-centric — owner-only counting would blind the
+    model exactly on the small/ragged shapes the mode targets)."""
     m, k, n = bucket
     lm, lk, ln = math.log2(m), math.log2(k), math.log2(n)
     lt = math.log2(tile)
     ls = math.log2(max(1, n_streams))
+    n_devices = topology.get("n_devices", 2)
+    capacity = max(1, int(n_devices) * max(1, n_streams))
     out: Dict[str, float] = {
         "lm": lm, "lk": lk, "ln": ln,
         "aspect_mn": lm - ln, "aspect_mk": lm - lk,
@@ -112,7 +131,10 @@ def features(routine: str, bucket, dtype_name: str,
         "ltile": lt, "ltile2": lt * lt,
         "ltile_x_dims": lt * (lm + lk + ln) / 3.0,
         "lstreams": ls, "lstreams2": ls * ls,
-        "lsteps": math.log2(max(1, _step_estimate(routine, bucket, tile))),
+        "lsteps": math.log2(max(1, _step_estimate(
+            routine, bucket, tile, work_centric=work_centric,
+            capacity=capacity))),
+        "work_centric": 1.0 if work_centric else 0.0,
     }
     for r in ROUTINES:
         out[f"routine_{r}"] = 1.0 if routine == r else 0.0
@@ -156,7 +178,9 @@ def training_rows(cache, fingerprint: str, backend: str,
             rows.append({
                 "features": features(routine, tuple(bucket), dtype_name,
                                      topo, cand["tile"], cand["n_streams"],
-                                     cand["policy"]),
+                                     cand["policy"],
+                                     work_centric=bool(
+                                         cand.get("work_centric", False))),
                 "log_makespan": math.log(span),
             })
     return rows

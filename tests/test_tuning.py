@@ -283,13 +283,19 @@ _MODEL_KW = dict(tiles=(128, 256, 512), streams=(2, 4),
                  policies=("blasx", "static"))
 
 
-def _seed_cache(cache, routines=("gemm",), sizes=(256, 384, 768, 1536)):
+def _seed_cache(cache, routines=("gemm",),
+                sizes=(256, 384, 768, 1536, (1500, 150, 1500))):
     """Sweep a training distribution into ``cache`` and return the
-    sweep-mode tuner that produced it."""
+    sweep-mode tuner that produced it.  The ragged (m, k, n) entry
+    keeps the model's aspect-ratio features exercised — an all-cube
+    training set extrapolates badly to thin-k serving shapes."""
     t = Autotuner(_shadow_cfg(), cache=cache, mode="sweep", **_MODEL_KW)
     for routine in routines:
         for m in sizes:
-            t.tune(routine, m, m, m)
+            if isinstance(m, tuple):
+                t.tune(routine, *m)
+            else:
+                t.tune(routine, m, m, m)
     return t
 
 
@@ -345,7 +351,7 @@ def test_model_adoption_is_disproved_by_confirmation(monkeypatch):
     bucket = (512, 128, 512)
     cands = t._candidates("gemm", bucket)
     spans = {c: t._shadow_makespan("gemm", bucket, c[0], "float64",
-                                   c[1], c[2]) for c in cands}
+                                   c[1], c[2], c[3]) for c in cands}
     worst = max(cands, key=spans.get)
     assert spans[worst] > spans[cands[0]]    # strictly worse than default
 
@@ -354,7 +360,8 @@ def test_model_adoption_is_disproved_by_confirmation(monkeypatch):
         ns = round(2 ** feats["lstreams"])
         policy = next(p for p in ("blasx", "static", "parsec", "cublasxt")
                       if feats.get(f"policy_{p}"))
-        return 0.0 if (tile, ns, policy) == worst else 1.0
+        wc = bool(feats.get("work_centric"))
+        return 0.0 if (tile, ns, policy, wc) == worst else 1.0
 
     monkeypatch.setattr(model, "predict", fake_predict)
     best = t.tune("gemm", 512, 100, 512)

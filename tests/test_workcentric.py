@@ -1,0 +1,326 @@
+"""Work-centric (Stream-K) decomposition acceptance: split-planner
+units, bitwise parity with owner mode on every routine x precision x
+time model x execution mode, fix-up ordering in the Chrome trace,
+ledger attribution, the steal-cannot-strand-a-fixup property, and the
+shape-bucket aliasing bugfix that motivated the sweep."""
+import numpy as np
+import pytest
+
+from repro.core import blas3
+from repro.core import task as taskmod
+from repro.core.runtime import BlasxRuntime, RuntimeConfig
+from repro.core.task import KIND_FIXUP, KIND_OWNER, KIND_PARTIAL
+from repro.core.taskqueue import ReadyQueue, ReservationStation
+from repro.core.tiling import (TileGrid, degree_of_parallelism,
+                               split_ranges, workcentric_parts)
+
+RNG = np.random.default_rng(17)
+
+
+def _cfg(**kw):
+    kw.setdefault("n_devices", 3)
+    kw.setdefault("mode", "sim")
+    kw.setdefault("cache_bytes", 32 << 20)
+    return RuntimeConfig(**kw)
+
+
+# ------------------------------------------------------- planner units
+@pytest.mark.parametrize("n_steps,n_parts", [
+    (3, 2), (7, 3), (8, 8), (5, 1), (12, 5)])
+def test_split_ranges_is_an_exact_partition(n_steps, n_parts):
+    ranges = split_ranges(n_steps, n_parts)
+    assert len(ranges) == min(n_parts, n_steps)
+    covered = [k for start, stop in ranges for k in range(start, stop)]
+    assert covered == list(range(n_steps))        # contiguous, in order
+    sizes = [stop - start for start, stop in ranges]
+    assert max(sizes) - min(sizes) <= 1           # balanced
+
+
+def test_split_ranges_rejects_nonpositive_parts():
+    with pytest.raises(ValueError):
+        split_ranges(4, 0)
+
+
+def test_workcentric_parts_triggers():
+    # small problem: 6 owners < capacity 16 -> fill two waves
+    assert workcentric_parts(32, 6, 16, ragged=False) == 6  # ceil(32/6)
+    # the floor is 2 parts even when one extra task would fill capacity
+    assert workcentric_parts(32, 15, 16, ragged=False) == 3
+    # never more parts than k-steps
+    assert workcentric_parts(2, 1, 16, ragged=False) == 2
+    # large problem: only ragged tiles split, and only in half
+    assert workcentric_parts(32, 100, 16, ragged=True) == 2
+    assert workcentric_parts(32, 100, 16, ragged=False) == 0
+    # a 1-step k-loop can never split
+    assert workcentric_parts(1, 2, 16, ragged=True) == 0
+
+
+def _gemm_tasks(n, tile, k=None):
+    k = n if k is None else k
+    ga = TileGrid("A", n, k, tile)
+    gb = TileGrid("B", k, n, tile)
+    gc = TileGrid("C", n, n, tile)
+    grids = {"A": ga, "B": gb, "C": gc}
+    return taskmod.taskize_gemm(ga, gb, gc, "N", "N", 1.0, 0.5), grids
+
+
+def test_plan_small_problem_splits_every_task():
+    tasks, grids = _gemm_tasks(256, 128)          # 4 owners, 2 k-steps
+    planned = taskmod.plan_work_centric(tasks, grids, capacity=8)
+    owners = [t for t in planned if t.kind == KIND_OWNER]
+    partials = [t for t in planned if t.kind == KIND_PARTIAL]
+    fixups = [t for t in planned if t.kind == KIND_FIXUP]
+    assert not owners                             # 4 < 8: all tasks split
+    assert len(fixups) == len(tasks)
+    assert len(partials) == 2 * len(tasks)        # min(2 steps, ...) = 2
+    for f in fixups:
+        orig = next(t for t in tasks if t.task_id == f.task_id)
+        sibs = [p for p in partials if p.parent == f.task_id]
+        # the fix-up keeps the owner id/steps/beta so downstream deps
+        # and the C_ij write stay exactly owner-shaped
+        assert f.steps == orig.steps and f.beta == orig.beta
+        assert set(f.deps) >= {p.task_id for p in sibs}
+        # partials never write: beta forced to 0, k_range recorded
+        assert all(p.beta == 0.0 for p in sibs)
+        ranges = sorted(p.k_range for p in sibs)
+        assert ranges[0][0] == 0 and ranges[-1][1] == len(orig.steps)
+        # MAC flops live on the partials; the fix-up charges the join
+        assert sum(p.flops for p in sibs) == orig.flops
+        h, w = grids["C"].tile_shape(f.i, f.j)
+        assert f.flops == len(sibs) * h * w
+
+
+def test_plan_large_problem_splits_only_ragged_tiles():
+    tasks, grids = _gemm_tasks(576, 128)          # 5x5 owners, edge 64
+    planned = taskmod.plan_work_centric(tasks, grids, capacity=8)
+    split_ids = {t.task_id for t in planned if t.kind == KIND_FIXUP}
+    gc = grids["C"]
+    for t in tasks:
+        ragged = gc.tile_shape(t.i, t.j) != (128, 128)
+        assert (t.task_id in split_ids) == ragged
+    # interior tasks pass through untouched (same object, owner kind)
+    interior = [t for t in planned if t.kind == KIND_OWNER]
+    assert all(gc.tile_shape(t.i, t.j) == (128, 128) for t in interior)
+
+
+def test_plan_narrows_partial_deps_to_their_k_range():
+    """TRSM's intra-column chain: the producer of C_kj is only a dep of
+    the partial whose k-range actually reads that tile."""
+    n, tile = 512, 128
+    ga = TileGrid("A", n, n, tile)
+    gb = TileGrid("B", n, n, tile)
+    gc = TileGrid("C", n, n, tile)
+    grids = {"A": ga, "B": gb, "C": gc}
+    tasks = taskmod.taskize_trsm(ga, gb, gc, "U", "N", "N", 1.0)
+    dep_full = {t.task_id: t for t in tasks}
+    planned = taskmod.plan_work_centric(tasks, grids, capacity=64)
+    narrowed = 0
+    for p in (t for t in planned if t.kind == KIND_PARTIAL):
+        owner = dep_full[p.parent]
+        assert set(p.deps) <= set(owner.deps)
+        start, stop = p.k_range
+        read = {s.a.key for s in p.steps} | {s.b.key for s in p.steps}
+        for d in p.deps:
+            assert dep_full[d].out in read    # dep produces a read tile
+        narrowed += len(owner.deps) - len(p.deps)
+    assert narrowed > 0   # at least one partial dropped an off-range dep
+
+
+def test_degree_of_parallelism_counts_partial_tasks():
+    # owner mode: Eq. 2 unchanged
+    assert degree_of_parallelism(512, 512, 128) == 16
+    # small problem, wc on: 4 owners < capacity 8 -> 4 parts each
+    # (capacity fill: ceil(2*8/4) = 4), so 4 owners + 4*4 partials
+    assert degree_of_parallelism(256, 256, 128, k=512,
+                                 work_centric=True, capacity=8) == 20
+    # 1-step k-loop: nothing to split
+    assert degree_of_parallelism(256, 256, 128, k=128,
+                                 work_centric=True, capacity=8) == 4
+
+
+# ------------------------------------------ shape-bucket aliasing bugfix
+def test_shape_bucket_no_longer_aliases_4100_into_8192():
+    """Fails before the geometric-midpoint edges: 4100^3 rounded to
+    8192^3 — a ~7.97x FLOP inflation — so the tuner swept a problem
+    8x the real one and could crown a tile that loses at the true
+    shape.  Midpoint edges cap cubic inflation at ~2.83x."""
+    from repro.tuning.autotuner import shape_bucket
+
+    bucket = shape_bucket(4100, 4100, 4100)
+    assert bucket == (5793, 5793, 5793)
+    inflation = (bucket[0] * bucket[1] * bucket[2]) / 4100 ** 3
+    assert inflation <= 4.0                       # was ~7.97x
+    # idempotent: a bucket edge maps to itself
+    assert shape_bucket(*bucket) == bucket
+    # legacy edges preserved (docs/TUNING.md example + floor)
+    assert shape_bucket(1000, 900, 1020) == (1024, 1024, 1024)
+    assert shape_bucket(300, 1, 64) == (362, 64, 64)
+
+
+# ------------------------------------------------------- bitwise parity
+def _run_routine(routine, dtype, *, work_centric, time_model="lump",
+                 mode="sim", backend=None):
+    n, tile = 320, 128   # ragged edge tiles included
+    rng = np.random.default_rng(42)  # identical operands per config
+    A = rng.standard_normal((n, n))
+    B = rng.standard_normal((n, n))
+    C = rng.standard_normal((n, n))
+    cfg = _cfg(time_model=time_model, mode=mode,
+               work_centric=work_centric)
+    kw = dict(tile=tile, config=cfg, dtype=dtype, backend=backend)
+    if routine == "gemm":
+        return blas3.gemm(A, B, C, beta=0.5, **kw)
+    if routine == "symm":
+        return blas3.symm(A, B, **kw)
+    if routine == "syrk":
+        return blas3.syrk(A, C, beta=0.5, uplo="L", **kw)
+    if routine == "syr2k":
+        return blas3.syr2k(A, B, **kw)
+    if routine == "trmm":
+        return blas3.trmm(A, B, uplo="L", **kw)
+    if routine == "trsm":
+        return blas3.trsm(A + n * np.eye(n), B, **kw)
+    raise AssertionError(routine)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32],
+                         ids=["f64", "f32"])
+@pytest.mark.parametrize(
+    "routine", ["gemm", "symm", "syrk", "syr2k", "trmm", "trsm"])
+def test_workcentric_bitwise_parity(routine, dtype):
+    """The Stream-K schedule only moves modeled clocks: the fix-up
+    re-dispatches the full original k-loop through the identical
+    backend path, so outputs are *bitwise* identical to owner mode on
+    every routine and precision, under both time models."""
+    owner = _run_routine(routine, dtype, work_centric=False)
+    wc_lump = _run_routine(routine, dtype, work_centric=True)
+    wc_events = _run_routine(routine, dtype, work_centric=True,
+                             time_model="events")
+    assert owner.dtype == wc_lump.dtype == wc_events.dtype
+    assert np.array_equal(owner, wc_lump)
+    assert np.array_equal(owner, wc_events)
+
+
+def test_workcentric_threads_mode_bitwise_parity():
+    """Threads mode really schedules the partial/fix-up graph across
+    worker threads (the lock-witness CI lane runs this file, so every
+    lock acquired on the path is order-tracked); any schedule must
+    reproduce the sim-mode owner result bit for bit."""
+    owner = _run_routine("gemm", np.float64, work_centric=False)
+    for _ in range(3):   # racy schedules differ run to run; results can't
+        wc = _run_routine("gemm", np.float64, work_centric=True,
+                          mode="threads")
+        assert np.array_equal(owner, wc)
+
+
+def test_workcentric_jax_backend_parity():
+    owner = _run_routine("gemm", np.float64, work_centric=False,
+                         backend="jax")
+    wc = _run_routine("gemm", np.float64, work_centric=True,
+                      backend="jax")
+    assert np.array_equal(owner, wc)
+
+
+# --------------------------------------------------- ledger attribution
+def test_ledger_attributes_partial_and_fixup_work():
+    n, tile = 320, 128    # 3x3 owners with ragged edges, 3 k-steps
+    rt = BlasxRuntime(_cfg(n_devices=2, work_centric=True))
+    A = RNG.standard_normal((n, n))
+    out = blas3.gemm(A, A, tile=tile, runtime=rt)
+    np.testing.assert_allclose(out, A @ A, rtol=1e-10, atol=1e-10)
+    partials = sum(d.ledger.partial_tasks for d in rt.devices)
+    fixups = sum(d.ledger.fixup_tasks for d in rt.devices)
+    tasks = sum(d.ledger.tasks for d in rt.devices)
+    # 2x4=8 capacity > 9 owners is false -> large-problem path: the 5
+    # ragged tiles split in two, the 4 interior tiles stay owners
+    assert fixups == 5 and partials == 10
+    assert tasks == 4 + partials + fixups
+    led = rt.devices[0].ledger
+    assert led.partial_flops >= 0 and led.fixup_flops >= 0
+    st = rt.stats()["device0"]
+    for key in ("partial_tasks", "fixup_tasks",
+                "partial_flops", "fixup_flops"):
+        assert key in st
+
+
+# ------------------------------------------------- trace kind + ordering
+def test_trace_tags_partials_and_orders_fixups_after_siblings():
+    """Compute spans carry the Stream-K role: partials point at their
+    owner via ``parent`` and the fix-up (which keeps the owner's
+    task_id) must never start before the last sibling partial ends —
+    the determinism the reduction join is built on, visible in the
+    artifact CI ships."""
+    from repro.core.events import trace_spans, validate_trace
+
+    n, tile = 320, 128
+    rt = BlasxRuntime(_cfg(n_devices=2, work_centric=True,
+                           time_model="events"))
+    A = RNG.standard_normal((n, n))
+    blas3.gemm(A, A, tile=tile, runtime=rt)
+    tr = rt.trace()
+    validate_trace(tr)
+    compute = [s for s in trace_spans(tr) if s["cat"] == "compute"]
+    partials = [s for s in compute if s["kind"] == "partial"]
+    fixups = {s["task_id"]: s for s in compute if s["kind"] == "fixup"}
+    assert partials and fixups
+    for p in partials:
+        f = fixups[p["parent"]]                  # every partial has its join
+        assert f["start"] >= p["end"] - 1e-12
+
+
+# ------------------------------------------------ stealing under partials
+def test_ready_queue_never_releases_fixup_before_siblings():
+    """Why steal() cannot strand a fix-up: a fix-up only ever reaches a
+    reservation station once ALL its partials completed, and from that
+    point it is runnable on any device — stealing it just moves the
+    join.  Pin the release rule at the queue level."""
+    tasks, grids = _gemm_tasks(256, 128)
+    planned = taskmod.plan_work_centric(tasks, grids, capacity=8)
+    partials = [t for t in planned if t.kind == KIND_PARTIAL]
+    q = ReadyQueue(planned)
+    drained = [q.try_dequeue() for _ in range(len(partials))]
+    assert all(t is not None and t.kind == KIND_PARTIAL for t in drained)
+    assert q.try_dequeue() is None               # every fix-up still held
+    *rest, last = drained
+    for t in rest:
+        q.complete(t)
+    # the other tiles' joins release, but the fix-up whose sibling
+    # `last` is still in flight stays pending
+    early = []
+    while (t := q.try_dequeue()) is not None:
+        early.append(t)
+    assert all(t.kind == KIND_FIXUP for t in early)
+    assert last.parent not in {t.task_id for t in early}
+    assert q.pending_count() == 1
+    q.complete(last)                             # last sibling lands...
+    released = q.try_dequeue()
+    assert released is not None and released.kind == KIND_FIXUP
+    assert released.task_id == last.parent       # ...and frees its join
+    # the join really waited on more than `last` alone
+    assert any(t.parent == last.parent for t in rest)
+
+
+def test_rs_steal_hands_over_a_runnable_fixup():
+    tasks, grids = _gemm_tasks(256, 128)
+    planned = taskmod.plan_work_centric(tasks, grids, capacity=8)
+    fixup = next(t for t in planned if t.kind == KIND_FIXUP)
+    victim = ReservationStation(device_id=0, n_slots=4)
+    victim.put(fixup, priority=0.0)
+    stolen = victim.steal()
+    assert stolen is fixup and len(victim) == 0
+
+
+def test_stealing_with_work_centric_completes_every_fixup():
+    """Integration: a 16x speed skew forces the fast device to steal
+    from the slow one's station mid-run; numerics stay exact and every
+    split tile still gets exactly one fix-up executed."""
+    n, tile = 320, 128
+    rt = BlasxRuntime(_cfg(
+        n_devices=2, work_centric=True,
+        speeds=[4.0, 0.25], nominal_speeds=[4.0, 0.25]))
+    A = RNG.standard_normal((n, n))
+    B = RNG.standard_normal((n, n))
+    out = blas3.gemm(A, B, tile=tile, runtime=rt)
+    np.testing.assert_allclose(out, A @ B, rtol=1e-10, atol=1e-10)
+    assert sum(d.ledger.steals for d in rt.devices) > 0
+    assert sum(d.ledger.fixup_tasks for d in rt.devices) == 5
