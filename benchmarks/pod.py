@@ -1,0 +1,218 @@
+"""Pod lane: the 3-level tile cache (host DRAM -> HBM -> ICI neighbor)
+on mesh_shard devices, staged vs unstaged (beyond-HBM regime).
+
+Each shape in ``SHAPES`` is a deep-k DGEMM whose per-task working set
+exceeds one device's modeled HBM but whose *unique* working set fits
+the pod's aggregate HBM — the regime the pod tier exists for.  The
+shape is scheduled twice on the virtual-clock event engine with
+``device_class="mesh_shard"``: once with panel staging
+(``plan_panel_staged`` splits each beyond-HBM task into HBM-sized
+panel partials + a streaming ring-reduce fix-up), once with
+``stage_panels=False`` (every fetch bypasses straight to host DRAM).
+Reported per shape:
+
+* ``makespan_staged`` / ``makespan_unstaged`` and their ratio — what
+  the third cache level is worth end to end;
+* ``staged_le_unstaged`` — the structural invariant
+  ``benchmarks/compare.py`` gates: staging through the cache must not
+  lose to the bypass baseline in this regime;
+* ``ici_time_consistent`` — the ledger decomposition invariant: on
+  every device, ICI lane busy seconds == ``ici_bytes / ici_bw``
+  exactly (every ICI transfer is charged at exactly the link rate);
+* ``ici_gb`` — modeled ICI traffic (ring scatter hops + neighbor-tier
+  L2 serves), the pod analogue of Table V's communication volume.
+
+The ``pod/parity`` row runs a small *executing* beyond-HBM DGEMM both
+ways and as a flat accelerator run: all three must agree bitwise
+(``pod_bitwise_equal`` — the tier reshapes schedules and clocks, never
+numerics).
+
+All metrics are virtual-clock derived: deterministic, identical on
+every host, so the gate holds them tightly.
+
+``python -m benchmarks.pod --trace trace_pod_pr.json`` additionally
+runs an executing beyond-HBM mesh_shard DGEMM through a
+``BlasxContext``, exports its Chrome trace, checks ICI-lane spans are
+present and account for every ledgered ICI byte, and validates the
+trace against the event-engine schema — the CI bench-smoke artifact.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+MESH_DEVICES = 4     # ring size of one mesh_shard scheduler device
+N_STREAMS = 2        # deep-k regime: fewer, longer pipelines win
+TILE = 1024
+CACHE_TILES = 24     # modeled HBM: 24 f64 tiles = 192 MiB per device
+
+# (n, k, n_devices): deep-k beyond-HBM DGEMMs.  quick keeps CI to one
+# shape; full sweeps the measured win-regime corners.
+QUICK_SHAPES = ((2048, 16384, 4),)
+FULL_SHAPES = ((2048, 16384, 4), (2048, 32768, 8), (4096, 16384, 8))
+
+# executing parity check: small enough to run numerics on 1 core, yet
+# beyond the shrunken HBM below (8 tiles of 64x64 f64)
+PARITY_N, PARITY_TILE = 512, 64
+PARITY_CACHE = 8 * PARITY_TILE * PARITY_TILE * 8
+
+
+def _shadow(n: int, k: int, n_devices: int, staged: bool):
+    from repro.core import task as taskmod
+    from repro.core.runtime import BlasxRuntime, RuntimeConfig
+    from repro.core.tiling import ShadowMatrix
+
+    rt = BlasxRuntime(RuntimeConfig(
+        n_devices=n_devices, n_streams=N_STREAMS, mode="sim",
+        execute=False, record_trace=False,
+        device_class="mesh_shard", mesh_devices=MESH_DEVICES,
+        cache_bytes=CACHE_TILES * TILE * TILE * 8,
+        stage_panels=staged))
+    mats = {"A": ShadowMatrix("A", n, k, TILE),
+            "B": ShadowMatrix("B", k, n, TILE),
+            "C": ShadowMatrix("C", n, n, TILE)}
+    tasks = taskmod.taskize_gemm(mats["A"].grid, mats["B"].grid,
+                                 mats["C"].grid, "N", "N", 1.0, 0.0)
+    rt.run(tasks, mats, "C")
+    return rt
+
+
+def _ici_consistent(rt) -> bool:
+    """ici_busy_s == ici_bytes / ici_bw on every device (exact up to
+    float summation order)."""
+    bw = rt.cfg.ici_bw
+    return all(abs(d.ledger.ici_busy_s - d.ledger.ici_bytes / bw)
+               <= 1e-9 * max(1.0, d.ledger.ici_busy_s)
+               for d in rt.devices)
+
+
+def _parity_row() -> Dict:
+    import numpy as np
+
+    from repro.core import blas3
+    from repro.core.runtime import RuntimeConfig
+
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((PARITY_N, PARITY_N))
+    B = rng.standard_normal((PARITY_N, PARITY_N))
+    pod_kw = dict(n_devices=2, mode="sim", cache_bytes=PARITY_CACHE,
+                  device_class="mesh_shard", mesh_devices=MESH_DEVICES)
+    base = blas3.gemm(A, B, tile=PARITY_TILE, config=RuntimeConfig(
+        n_devices=2, mode="sim", cache_bytes=PARITY_CACHE))
+    staged = blas3.gemm(A, B, tile=PARITY_TILE,
+                        config=RuntimeConfig(**pod_kw))
+    unstaged = blas3.gemm(A, B, tile=PARITY_TILE, config=RuntimeConfig(
+        stage_panels=False, **pod_kw))
+    equal = int(np.array_equal(staged, unstaged)
+                and np.array_equal(staged, base)
+                and np.allclose(staged, A @ B))
+    return {"name": "pod/parity", "us_per_call": "",
+            "n": PARITY_N, "tile": PARITY_TILE,
+            "pod_bitwise_equal": equal}
+
+
+def run(quick: bool = True) -> List[Dict]:
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    rows: List[Dict] = []
+    le_flags: List[int] = []
+    ici_flags: List[int] = []
+    for n, k, n_devices in shapes:
+        on = _shadow(n, k, n_devices, staged=True)
+        off = _shadow(n, k, n_devices, staged=False)
+        le = int(on.makespan() <= off.makespan() * (1 + 1e-9))
+        ici_ok = int(_ici_consistent(on) and _ici_consistent(off))
+        le_flags.append(le)
+        ici_flags.append(ici_ok)
+        rows.append({
+            "name": f"pod/staged_{n}x{k}x{n_devices}d",
+            "us_per_call": "",
+            "tile": TILE, "mesh_devices": MESH_DEVICES,
+            "makespan_staged": f"{on.makespan():.4f}",
+            "makespan_unstaged": f"{off.makespan():.4f}",
+            "staged_speedup": f"{off.makespan() / on.makespan():.3f}",
+            "ici_gb": f"{on.total_comm_bytes()['ici'] / 1e9:.3f}",
+            "staged_le_unstaged": le,
+            "ici_time_consistent": ici_ok,
+        })
+    parity = _parity_row()
+    rows.append(parity)
+    rows.append({
+        "name": "pod/summary",
+        "us_per_call": "",
+        "staged_le_unstaged_all": int(all(le_flags)),
+        "ici_time_consistent_all": int(all(ici_flags)),
+        "pod_bitwise_equal": parity["pod_bitwise_equal"],
+    })
+    return rows
+
+
+def export_trace_pod(path: str) -> dict:
+    """CI artifact: an *executing* beyond-HBM mesh_shard DGEMM traced
+    end to end.  Beyond the event-engine schema gate this validates the
+    pod tier itself: ICI-lane spans are present and their bytes equal
+    the ledgered ICI total, and the lane-time decomposition
+    ``ici_busy_s == ici_bytes / ici_bw`` holds on every device."""
+    import numpy as np
+
+    from repro.api import BlasxContext
+    from repro.core.events import validate_trace
+    from repro.core.runtime import RuntimeConfig
+
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((PARITY_N, PARITY_N))
+    B = rng.standard_normal((PARITY_N, PARITY_N))
+    with BlasxContext(RuntimeConfig(
+            n_devices=2, mode="sim", cache_bytes=PARITY_CACHE,
+            device_class="mesh_shard", mesh_devices=MESH_DEVICES),
+            tile=PARITY_TILE) as ctx:
+        out = ctx.gemm(A, B)
+        np.testing.assert_allclose(out.array(), A @ B, rtol=1e-10,
+                                   atol=1e-10)
+        rt = ctx.runtime
+        if not _ici_consistent(rt):
+            raise ValueError("ici_busy_s != ici_bytes/ici_bw")
+        ledgered = rt.total_comm_bytes()["ici"]
+        tr = ctx.trace(path)
+    summary = validate_trace(tr)
+    traced = sum((ev.get("args") or {}).get("nbytes", 0)
+                 for ev in tr["traceEvents"]
+                 if ev.get("ph") == "B" and ev.get("cat") == "ici")
+    if ledgered == 0 or traced != ledgered:
+        raise ValueError(
+            f"ICI bytes mismatch: {traced} on trace spans vs "
+            f"{ledgered} ledgered")
+    print(f"# pod trace: {summary['spans']} spans, "
+          f"{ledgered} ICI bytes on-lane -> {path}")
+    return tr
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import rows_to_csv
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.pod",
+        description="pod tier lane + Chrome-trace artifact")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export + validate the executing beyond-HBM "
+                         "mesh_shard DGEMM trace INSTEAD of running the "
+                         "lane (the CI artifact step)")
+    ap.add_argument("--validate", metavar="PATH",
+                    help="round-trip an exported trace file through the "
+                         "schema validator and exit non-zero on "
+                         "violations (the CI gate step)")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.validate:
+        print(rows_to_csv(run()))
+    if args.trace:
+        export_trace_pod(args.trace)
+    if args.validate:
+        from repro.core.events import main as validate_main
+        return validate_main([args.validate])
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

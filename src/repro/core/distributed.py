@@ -36,6 +36,16 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..kernels.pallas_compat import shard_map
+
+
+def _acc_type(a_dtype, b_dtype):
+    """MXU accumulation dtype: at least f32 (the bf16/f32 paths keep
+    their historical f32 accumulate bit-for-bit), widened to f64 when
+    either operand is 64-bit (jax_enable_x64 serving)."""
+    return jnp.promote_types(jnp.float32,
+                             jnp.promote_types(a_dtype, b_dtype))
+
 
 # --------------------------------------------------------------------------
 # shard_map bodies (take axis_name; composable inside larger programs)
@@ -65,9 +75,12 @@ def ring_allgather_matmul(x_local: jax.Array, w_local: jax.Array,
         nxt = lax.ppermute(chunk, axis_name, perm) if s < d - 1 else None
         # the panel now in hand originated at device (idx - s) mod d
         slot = (idx - s) % d
-        part = jnp.dot(chunk, w_local,
-                       preferred_element_type=jnp.float32).astype(y.dtype)
-        y = lax.dynamic_update_slice(y, part, (slot * m_local, 0))
+        part = jnp.dot(chunk, w_local, preferred_element_type=_acc_type(
+            chunk.dtype, w_local.dtype)).astype(y.dtype)
+        # both indices pinned to one dtype: under jax_enable_x64 a bare
+        # 0 would be int64 next to the int32 traced slot index
+        start = (slot * m_local).astype(jnp.int32)
+        y = lax.dynamic_update_slice(y, part, (start, jnp.int32(0)))
         chunk = nxt
     return y
 
@@ -81,20 +94,27 @@ def ring_reduce_scatter_matmul(x_local: jax.Array, w_local: jax.Array,
     the accumulator hop (ppermute) overlaps the *next* row-block's
     matmul.  The matmul is deliberately blocked by row so only one
     block is computed per ring step (BLASX's k-step interleaving).
+
+    Ragged row counts (``m % d != 0`` — real serving shapes) are padded
+    with zero rows up to the next ring multiple, so the returned shard
+    is ``ceil(m/d)`` rows and the global output has ``d*ceil(m/d)``
+    rows whose tail is zeros; callers slice (``tp_matmul`` /
+    ``distributed_gemm`` do).
     """
     # psum of a literal folds to a static int on every jax version;
     # lax.axis_size only exists on newer releases
     d = lax.psum(1, axis_name)
     idx = lax.axis_index(axis_name)
     m = x_local.shape[0]
-    if m % d != 0:
-        raise ValueError(f"rows {m} not divisible by ring size {d}")
-    mb = m // d
+    mb = -(-m // d)
+    if mb * d != m:  # pad-and-slice ragged shards (zero rows are inert)
+        x_local = jnp.pad(x_local, ((0, mb * d - m), (0, 0)))
     perm = [(i, (i + 1) % d) for i in range(d)]
 
     def block(b):
         xs = lax.dynamic_slice_in_dim(x_local, b * mb, mb, axis=0)
-        return jnp.dot(xs, w_local, preferred_element_type=jnp.float32)
+        return jnp.dot(xs, w_local, preferred_element_type=_acc_type(
+            xs.dtype, w_local.dtype))
 
     # start with the block that must travel the full ring (locality-first:
     # it is computed from the panel already resident on this device)
@@ -108,12 +128,19 @@ def ring_reduce_scatter_matmul(x_local: jax.Array, w_local: jax.Array,
 # ------------------------------------------------------- gspmd baselines
 def gspmd_allgather_matmul(x_local, w_local, axis_name):
     x_full = lax.all_gather(x_local, axis_name, axis=0, tiled=True)
-    return jnp.dot(x_full, w_local, preferred_element_type=jnp.float32
+    return jnp.dot(x_full, w_local, preferred_element_type=_acc_type(
+        x_full.dtype, w_local.dtype)
                    ).astype(jnp.promote_types(x_local.dtype, w_local.dtype))
 
 
 def gspmd_reduce_scatter_matmul(x_local, w_local, axis_name):
-    part = jnp.dot(x_local, w_local, preferred_element_type=jnp.float32)
+    d = lax.psum(1, axis_name)
+    m = x_local.shape[0]
+    mb = -(-m // d)
+    if mb * d != m:  # same pad-and-slice contract as the ring twin
+        x_local = jnp.pad(x_local, ((0, mb * d - m), (0, 0)))
+    part = jnp.dot(x_local, w_local, preferred_element_type=_acc_type(
+        x_local.dtype, w_local.dtype))
     out = lax.psum_scatter(part, axis_name, scatter_dimension=0, tiled=True)
     return out.astype(jnp.promote_types(x_local.dtype, w_local.dtype))
 
@@ -141,29 +168,48 @@ def distributed_gemm(A: jax.Array, B: jax.Array, mesh: Mesh, *,
     col_axis; with ``mode='ring'`` that reduction is the overlap-
     friendly ring reduce-scatter GEMM above, re-gathered to keep C's
     K-replicated layout.
+
+    Ragged shapes (M not divisible by the row axis, K not divisible by
+    the column axis, or a row-shard not divisible by the ring size) are
+    padded with zeros internally and the result sliced back to
+    ``(M, N)`` — the zero padding lives in the tail shard, so the slice
+    is exact.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {sorted(MODES)}")
+    dr = mesh.shape[row_axis]
+    dc = mesh.shape[col_axis]
+    m, k = A.shape
+    m_pad = -(-m // dr) * dr
+    k_pad = -(-k // dc) * dc
+    if m_pad != m or k_pad != k:
+        A = jnp.pad(A, ((0, m_pad - m), (0, k_pad - k)))
+    if k_pad != k:
+        B = jnp.pad(B, ((0, k_pad - k), (0, 0)))
 
     def body(a_blk, b_blk):
         # a_blk: (m/dr, k/dc); b_blk: (k/dc, n)
         if mode == "ring":
             y = ring_reduce_scatter_matmul(a_blk, b_blk, col_axis)
             y = lax.all_gather(y, col_axis, axis=0, tiled=True)
+            # the ring kernel pads ragged row-shards up to the next
+            # ring multiple; drop those rows so out_specs stay exact
+            y = y[:a_blk.shape[0]]
         else:
-            part = jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+            part = jnp.dot(a_blk, b_blk, preferred_element_type=_acc_type(
+                a_blk.dtype, b_blk.dtype))
             y = lax.psum(part, col_axis).astype(
                 jnp.promote_types(a_blk.dtype, b_blk.dtype))
         return y
 
-    from jax.experimental.shard_map import shard_map
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(row_axis, col_axis), P(col_axis, None)),
         out_specs=P(row_axis, None),
         check_rep=False,
     )
-    return fn(A, B)
+    C = fn(A, B)
+    return C[:m] if m_pad != m else C
 
 
 def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, *, axis: str = "model",
@@ -175,10 +221,18 @@ def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, *, axis: str = "model",
                    returns activations col-sharded (full sequence).
     kind='row'   : x is feature-sharded on ``axis``; W row-sharded;
                    returns activations sequence-sharded on ``axis``.
+
+    A sequence length not divisible by the ``axis`` ring is padded with
+    zeros up to the next multiple and the result sliced back — ragged
+    serving shapes work for both kinds and both modes.
     """
     ag, rs = MODES[mode]
-    from jax.experimental.shard_map import shard_map
     bspec = batch_axis if batch_axis else None
+    d = mesh.shape[axis]
+    s = x.shape[1]
+    s_pad = -(-s // d) * d
+    if s_pad != s:
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0)))
 
     if kind == "column":
         def body(xl, wl):
@@ -188,7 +242,8 @@ def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, *, axis: str = "model",
         fn = shard_map(body, mesh=mesh,
                        in_specs=(P(bspec, axis, None), P(None, axis)),
                        out_specs=P(bspec, None, axis), check_rep=False)
-        return fn(x, w)
+        y = fn(x, w)
+        return y[:, :s] if s_pad != s else y
     elif kind == "row":
         def body(xl, wl):
             x2 = xl.reshape(-1, xl.shape[-1])
@@ -197,5 +252,6 @@ def tp_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, *, axis: str = "model",
         fn = shard_map(body, mesh=mesh,
                        in_specs=(P(bspec, None, axis), P(axis, None)),
                        out_specs=P(bspec, axis, None), check_rep=False)
-        return fn(x, w)
+        y = fn(x, w)
+        return y[:, :s] if s_pad != s else y
     raise ValueError(f"kind must be column|row, got {kind}")

@@ -1,12 +1,39 @@
-"""Version shims for the jax pallas TPU surface shared by the kernels.
+"""Version shims for the jax pallas/SPMD surface shared by the kernels.
 
 Newer jax releases renamed ``pltpu.TPUCompilerParams`` to
-``pltpu.CompilerParams``; resolve whichever exists once, here, so the
-kernels stay importable across versions.
+``pltpu.CompilerParams`` and promoted ``shard_map`` out of
+``jax.experimental`` to ``jax.shard_map`` (dropping the ``check_rep``
+kwarg along the way); resolve whichever exists once, here, so the
+kernels and the model stack stay importable across versions.
 """
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as exp_fn
+    return exp_fn
+
+
+_SHARD_MAP = _resolve_shard_map()
+
+
+def shard_map(body, *, mesh, in_specs, out_specs, check_rep=False):
+    """``shard_map`` across jax versions: prefers ``jax.shard_map``,
+    falls back to the deprecated experimental import, and tolerates
+    APIs that no longer accept ``check_rep`` (replication checking is
+    simply skipped there — every caller in this repo passes False)."""
+    try:
+        return _SHARD_MAP(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep)
+    except TypeError:
+        return _SHARD_MAP(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)

@@ -136,8 +136,9 @@ def row_parallel_matmul(x: jax.Array, w: jax.Array,
     if (not BF16_ROW_PSUM or rules.mesh is None or n <= 1
             or x.ndim != 3 or x.shape[-1] % n or w.shape[0] % n):
         return x @ w
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..kernels.pallas_compat import shard_map
     bspec = rules.physical("batch")
 
     def body(xl, wl):

@@ -106,8 +106,9 @@ def _moe_block_sharded(cfg, p: dict, x: jax.Array, rules: MeshRules,
     token block, scatters locally into ITS E/model_n experts' capacity
     buffers, computes, and contributes a partial (N_local, d) output —
     combined by a single psum over the model axis."""
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..kernels.pallas_compat import shard_map
 
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k

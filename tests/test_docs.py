@@ -70,6 +70,7 @@ _RUNNABLES = {
     "benchmarks/run.py": "benchmarks.run",
     "compare.py": "benchmarks.compare",
     "benchmarks.overlap": "benchmarks.overlap",
+    "benchmarks.pod": "benchmarks.pod",
     "repro.serve": "repro.serve.__main__",
     "repro.analysis": "repro.analysis",
 }

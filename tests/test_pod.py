@@ -1,0 +1,280 @@
+"""Pod-scale tier acceptance: device classes, the 3-level tile cache
+(host DRAM -> device HBM -> ICI neighbor), panel staging for
+beyond-HBM GEMMs, ICI lane/ledger accounting, knob threading through
+context/blas3/cblas, and the autotuner topology fingerprint."""
+import numpy as np
+import pytest
+
+from repro.core import blas3
+from repro.core import task as taskmod
+from repro.core.runtime import (DEVICE_CLASSES, ICI_BW, BlasxRuntime,
+                                DeviceClass, RuntimeConfig)
+from repro.core.task import KIND_FIXUP, KIND_OWNER, KIND_PARTIAL
+from repro.core.tiling import TileGrid, TiledMatrix, panel_parts
+
+RNG = np.random.default_rng(11)
+
+TILE = 64
+TILE_BYTES = TILE * TILE * 8                     # f64 tile
+# beyond-HBM regime: 512x512 needs 8x8=64 A-tiles alone, HBM holds 8
+SMALL_HBM = 8 * TILE_BYTES
+
+
+def _pod_cfg(**kw):
+    kw.setdefault("n_devices", 2)
+    kw.setdefault("mode", "sim")
+    kw.setdefault("device_class", "mesh_shard")
+    kw.setdefault("mesh_devices", 4)
+    return RuntimeConfig(**kw)
+
+
+# ------------------------------------------------------- device classes
+def test_device_class_registry_and_peaks():
+    acc, mesh = DEVICE_CLASSES["accelerator"], DEVICE_CLASSES["mesh_shard"]
+    assert not acc.ring and mesh.ring
+    assert acc.peak_flops(1e12, 4) == 1e12       # flat device ignores mesh
+    assert mesh.peak_flops(1e12, 4) == 4e12      # a device IS the ring
+    assert acc.hop_bytes(1000, 4) == 0           # fills never touch ICI
+    assert mesh.hop_bytes(1000, 4) == 750        # (d-1)/d scatter traffic
+    assert mesh.hop_bytes(1000, 1) == 0
+    assert DeviceClass("x", ring=False).hop_bytes(8, 16) == 0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="device_class"):
+        RuntimeConfig(device_class="tpu")
+    with pytest.raises(ValueError, match="mesh_devices"):
+        RuntimeConfig(device_class="mesh_shard", mesh_devices=1)
+    with pytest.raises(ValueError, match="mesh_shard"):
+        RuntimeConfig(mesh_devices=4)            # ring size on a flat class
+    with pytest.raises(ValueError, match="ici_bw"):
+        RuntimeConfig(ici_bw=0.0)
+    cfg = _pod_cfg()
+    assert cfg.device_peak_flops == cfg.peak_flops * 4
+    assert cfg.stage_panels_on                   # derived from the class
+    assert not RuntimeConfig().stage_panels_on
+    # explicit stage_panels wins over the class default either way
+    assert not _pod_cfg(stage_panels=False).stage_panels_on
+    assert RuntimeConfig(stage_panels=True).stage_panels_on
+
+
+def test_topology_fingerprint_carries_pod_fields():
+    base, pod = RuntimeConfig().topology(), _pod_cfg(n_devices=2).topology()
+    for k in ("device_class", "mesh_devices", "ici_bw"):
+        assert k in base and k in pod
+    assert base["device_class"] == "accelerator"
+    assert pod != base
+    # the learned cost model ingests only numeric topology features —
+    # the string class stays fingerprint-only, the ring fields join
+    from repro.tuning.model import feature_names
+    names = feature_names(pod)
+    assert "topo_device_class" not in names
+    assert "topo_mesh_devices" in names and "topo_ici_bw" in names
+
+
+# ------------------------------------------------------- panel planner
+def test_panel_parts_triggers_only_beyond_hbm():
+    cache = 100
+    assert panel_parts(80, cache, 8) == 0        # fits HBM: never split
+    assert panel_parts(100, cache, 8) == 0       # boundary still fits
+    assert panel_parts(101, cache, 8) == 3       # ceil(101/50) panels
+    assert panel_parts(400, cache, 8) == 8       # capped at k-steps
+    assert panel_parts(400, cache, 1) == 0       # 1-step loop can't split
+    assert panel_parts(400, 0, 8) == 0           # no cache model: off
+
+
+def _gemm_tasks(n, tile, k=None):
+    k = k if k is not None else n
+    ga, gb, gc = (TileGrid("A", n, k, tile), TileGrid("B", k, n, tile),
+                  TileGrid("C", n, n, tile))
+    grids = {"A": ga, "B": gb, "C": gc}
+    tasks = taskmod.taskize_gemm(ga, gb, gc, "N", "N", 1.0, 0.0)
+    mats = {m: TiledMatrix(g.matrix_id, np.zeros((g.rows, g.cols)), tile)
+            for m, g in grids.items()}
+    return tasks, grids, mats
+
+
+def test_plan_panel_staged_splits_beyond_hbm_tasks():
+    tasks, grids, mats = _gemm_tasks(512, TILE)  # 8 k-steps/task
+    planned = taskmod.plan_panel_staged(tasks, mats, SMALL_HBM)
+    owners = [t for t in planned if t.kind == KIND_OWNER]
+    partials = [t for t in planned if t.kind == KIND_PARTIAL]
+    fixups = [t for t in planned if t.kind == KIND_FIXUP]
+    assert not owners and len(fixups) == len(tasks)
+    # each task reads 8 A + 8 B tiles = 16 tiles >> the 8-tile HBM;
+    # panels sized to cache/2 = 4 tiles -> ceil(16/4) = 4 parts
+    assert len(partials) == 4 * len(tasks)
+    for f in fixups:
+        sibs = [p for p in partials if p.parent == f.task_id]
+        assert f.deps[-len(sibs):] == tuple(p.task_id for p in sibs)
+        assert all(p.beta == 0.0 for p in sibs)  # partials never write C
+    # within-HBM problems pass through untouched
+    small, _, smats = _gemm_tasks(128, TILE)
+    assert taskmod.plan_panel_staged(small, smats, 1 << 30) == small
+
+
+# --------------------------------------------- beyond-HBM GEMM numerics
+def test_beyond_hbm_staged_gemm_is_bitwise_identical():
+    """The tentpole acceptance: a GEMM whose working set exceeds one
+    device's HBM runs through the 3-level staged path and matches the
+    unstaged pod run, the flat accelerator run, and the dense oracle —
+    the accelerator path is bit-and-result identical to before."""
+    n = 512
+    A = RNG.standard_normal((n, n))
+    B = RNG.standard_normal((n, n))
+    base = blas3.gemm(A, B, tile=TILE, config=RuntimeConfig(
+        n_devices=2, mode="sim", cache_bytes=SMALL_HBM))
+    staged = blas3.gemm(A, B, tile=TILE, config=_pod_cfg(
+        cache_bytes=SMALL_HBM))
+    unstaged = blas3.gemm(A, B, tile=TILE, config=_pod_cfg(
+        cache_bytes=SMALL_HBM, stage_panels=False))
+    assert np.array_equal(staged, unstaged)
+    assert np.array_equal(staged, base)
+    np.testing.assert_allclose(staged, A @ B, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("routine", ["syrk", "trsm"])
+def test_pod_parity_beyond_gemm(routine):
+    n = 384
+    A = RNG.standard_normal((n, n))
+    if routine == "trsm":
+        A = A + n * np.eye(n)                    # well-conditioned solve
+    B = RNG.standard_normal((n, n))
+    kw = dict(tile=TILE)
+    fn = getattr(blas3, routine)
+    args = (A,) if routine == "syrk" else (A, B)
+    base = fn(*args, config=RuntimeConfig(
+        n_devices=2, mode="sim", cache_bytes=SMALL_HBM), **kw)
+    pod = fn(*args, config=_pod_cfg(cache_bytes=SMALL_HBM), **kw)
+    assert np.array_equal(base, pod)
+
+
+# ------------------------------------------------------ ICI accounting
+def test_ici_busy_equals_bytes_over_bandwidth():
+    """The ledger decomposition the bench gate relies on: every ICI
+    transfer is charged at exactly ici_bw, so lane busy seconds equal
+    ici_bytes / ici_bw on every device — by construction, not fit."""
+    n = 512
+    A = RNG.standard_normal((n, n))
+    rt = BlasxRuntime(_pod_cfg(cache_bytes=SMALL_HBM))
+    blas3.gemm(A, A, tile=TILE, runtime=rt)
+    total = 0
+    for d in rt.devices:
+        assert d.ledger.ici_bytes > 0
+        np.testing.assert_allclose(
+            d.ledger.ici_busy_s, d.ledger.ici_bytes / rt.cfg.ici_bw,
+            rtol=1e-12)
+        total += d.ledger.ici_bytes
+    assert rt.total_comm_bytes()["ici"] == total
+
+
+def test_accelerator_path_never_touches_ici():
+    n = 512
+    A = RNG.standard_normal((n, n))
+    rt = BlasxRuntime(RuntimeConfig(n_devices=2, mode="sim",
+                                    cache_bytes=SMALL_HBM))
+    blas3.gemm(A, A, tile=TILE, runtime=rt)
+    assert rt.total_comm_bytes()["ici"] == 0
+    assert all(d.ledger.ici_busy_s == 0.0 for d in rt.devices)
+
+
+def test_trace_has_ici_lane_spans():
+    from repro.core.events import trace_spans, validate_trace
+
+    n = 512
+    A = RNG.standard_normal((n, n))
+    rt = BlasxRuntime(_pod_cfg(cache_bytes=SMALL_HBM))
+    blas3.gemm(A, A, tile=TILE, runtime=rt)
+    tr = rt.trace()
+    validate_trace(tr)
+    assert [s for s in trace_spans(tr) if s["cat"] == "ici"]
+    # every modeled ICI byte shows up on a trace span
+    nbytes = sum((ev.get("args") or {}).get("nbytes", 0)
+                 for ev in tr["traceEvents"]
+                 if ev.get("ph") == "B" and ev.get("cat") == "ici")
+    assert nbytes == rt.total_comm_bytes()["ici"]
+
+
+def test_neighbor_tier_serves_ride_ici_not_pcie():
+    """Level 3 of the cache: an L2 hit between mesh_shard devices is a
+    neighbor-ICI transfer (fast lane, ici ledger), not a PCIe peer copy
+    — d2d stays reserved for the flat accelerator fabric."""
+    n = 512
+    A = RNG.standard_normal((n, n))
+    pod = BlasxRuntime(_pod_cfg(cache_bytes=SMALL_HBM))
+    blas3.gemm(A, A, tile=TILE, runtime=pod)
+    acc = BlasxRuntime(RuntimeConfig(n_devices=2, mode="sim",
+                                     cache_bytes=SMALL_HBM))
+    blas3.gemm(A, A, tile=TILE, runtime=acc)
+    assert pod.total_comm_bytes()["d2d"] == 0
+    assert acc.total_comm_bytes()["d2d"] > 0
+
+
+# ------------------------------------------------- staged wins deep-k
+def test_staged_beats_unstaged_on_deep_k_shadow():
+    """The regime the tier exists for: a deep-k beyond-HBM DGEMM whose
+    unique working set fits the *pod's aggregate* HBM.  Staging panels
+    through the cache must beat the bypass-everything baseline on the
+    virtual clock (same invariant benchmarks/compare.py gates)."""
+    from repro.core.tiling import ShadowMatrix
+
+    n, k, tile = 2048, 16384, 1024
+    cache = 24 * tile * tile * 8                 # 24 f64 tiles of HBM
+    makespans = {}
+    for staged in (True, False):
+        rt = BlasxRuntime(_pod_cfg(
+            n_devices=4, n_streams=2, cache_bytes=cache, execute=False,
+            record_trace=False, stage_panels=staged))
+        mats = {"A": ShadowMatrix("A", n, k, tile),
+                "B": ShadowMatrix("B", k, n, tile),
+                "C": ShadowMatrix("C", n, n, tile)}
+        tasks = taskmod.taskize_gemm(mats["A"].grid, mats["B"].grid,
+                                     mats["C"].grid, "N", "N", 1.0, 0.0)
+        rt.run(tasks, mats, "C")
+        makespans[staged] = rt.makespan()
+    assert makespans[True] < makespans[False]
+
+
+# --------------------------------------------------- API knob threading
+def test_context_knobs_thread_to_config_and_records():
+    from repro.api import BlasxContext
+
+    A = RNG.standard_normal((300, 200))
+    B = RNG.standard_normal((200, 250))
+    with BlasxContext(mesh=4, tile=TILE) as ctx:
+        # mesh= alone implies the mesh_shard class
+        assert ctx.cfg.device_class == "mesh_shard"
+        assert ctx.cfg.mesh_devices == 4
+        out = ctx.gemm(A, B).array()
+        np.testing.assert_allclose(out, A @ B, rtol=1e-10, atol=1e-10)
+        rec = ctx.calls[-1]
+        assert rec.ici_bytes > 0
+        assert rec.input_bytes >= rec.ici_bytes
+    with BlasxContext(tile=TILE) as ctx:
+        ctx.gemm(A, B)
+        assert ctx.calls[-1].ici_bytes == 0
+    with pytest.raises(ValueError, match="runtime"):
+        BlasxContext(runtime=BlasxRuntime(RuntimeConfig()), mesh=4)
+
+
+def test_blas3_and_cblas_knobs():
+    from repro.api import cblas
+
+    A = RNG.standard_normal((192, 160))
+    B = RNG.standard_normal((160, 128))
+    base = blas3.gemm(A, B, tile=TILE,
+                      config=RuntimeConfig(n_devices=2, mode="sim"))
+    pod = blas3.gemm(A, B, tile=TILE, device_class="mesh_shard", mesh=4)
+    assert np.array_equal(base, pod)
+    C = np.zeros((192, 128))
+    cblas.cblas_dgemm(cblas.CblasRowMajor, cblas.CblasNoTrans,
+                      cblas.CblasNoTrans, 192, 128, 160, 1.0, A, 160,
+                      B, 128, 0.0, C, 128, mesh=4, tile=TILE)
+    assert np.array_equal(C, base)
+    # pod knobs conflicting with an explicit ctx= are config errors
+    from repro.api import BlasxContext
+    with BlasxContext(mesh=4) as ctx:
+        with pytest.raises(ValueError, match="mesh"):
+            cblas._ctx(ctx, mesh=8)
+        with pytest.raises(ValueError, match="device_class"):
+            cblas._ctx(ctx, device_class="accelerator")
